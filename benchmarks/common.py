@@ -1,0 +1,48 @@
+"""Shared benchmark helpers."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def time_fn(fn, *args, warmup: int = 2, iters: int = 10) -> float:
+    """Median wall time (us per call) of a jitted callable."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def emit(name: str, us: float, derived: str = ""):
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def siren_paper_setup(order: int, hidden: int = 256, layers: int = 3):
+    """The paper's evaluation workload: SIREN gradient graph at batch 64."""
+    import jax
+
+    from repro.configs.siren import SirenConfig
+    from repro.core.passes import optimize
+    from repro.core.trace import extract_graph
+    from repro.inr.gradnet import paper_gradients
+    from repro.inr.siren import siren_fn, siren_init
+
+    cfg = SirenConfig(hidden_features=hidden, hidden_layers=layers)
+    params = siren_init(cfg, jax.random.PRNGKey(0))
+    f = siren_fn(cfg, params)
+    x = jax.random.uniform(jax.random.PRNGKey(1),
+                           (cfg.batch, cfg.in_features), jnp.float32, -1, 1)
+    gfn = paper_gradients(f, order, cfg.out_features, cfg.in_features)
+    g = extract_graph(gfn, x)
+    optimize(g)
+    return cfg, gfn, g, x

@@ -1,0 +1,61 @@
+"""Kernel-library microbenchmarks.
+
+Pallas kernels target TPU; on this CPU container interpret-mode timing is
+meaningless, so wall-times here are for the jnp reference paths (which XLA
+compiles natively), plus the structural quantity that matters for the paper:
+bytes NOT round-tripped to memory thanks to fusion (the fused_chain /
+siren_layer segments).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.kernels import ref
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 4)
+
+    a = jax.random.normal(ks[0], (1024, 1024), jnp.float32)
+    b = jax.random.normal(ks[1], (1024, 1024), jnp.float32)
+    us = time_fn(jax.jit(ref.stream_matmul), a, b)
+    emit("kernels/matmul_1024_ref", us, "jnp reference (CPU wall)")
+
+    x = jax.random.normal(ks[0], (4096, 256), jnp.float32)
+    w = jax.random.normal(ks[1], (256, 256), jnp.float32) * 0.05
+    bias = jnp.zeros((256,))
+    us_fused = time_fn(jax.jit(lambda x: ref.siren_layer(x, w, bias)), x)
+    us_unfused = time_fn(jax.jit(
+        lambda x: jnp.sin(30.0 * (ref.stream_matmul(x, w) + bias))), x)
+    emit("kernels/siren_layer_fused", us_fused,
+         f"vs unfused {us_unfused:.1f}us")
+    # traffic saved by fusing sin into the matmul epilogue: one [B,N] f32
+    saved = x.shape[0] * 256 * 4 * 2
+    emit("kernels/siren_layer_bytes_saved", saved, "per call, HBM round-trip")
+
+    chain = (("sin", None), ("scale", 30.0), ("mul", None))
+    o = jax.random.normal(ks[2], (4096, 256), jnp.float32)
+    us = time_fn(jax.jit(lambda x, o: ref.fused_chain(x, chain, (o,))), x, o)
+    emit("kernels/fused_chain3_ref", us,
+         f"bytes_saved_by_fusion={2 * x.size * 4 * 2}")
+
+    q = jax.random.normal(ks[0], (1, 1024, 8, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 1024, 2, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 1024, 2, 64), jnp.float32)
+    from repro.models.layers import flash_attention as jnp_flash
+    us_flash = time_fn(jax.jit(lambda q, k, v: jnp_flash(q, k, v)), q, k, v)
+    us_dense = time_fn(jax.jit(lambda q, k, v: ref.flash_attention(q, k, v)),
+                       q, k, v)
+    emit("kernels/flash_attention_blockwise", us_flash,
+         f"dense={us_dense:.1f}us; blockwise avoids [S,S] residency")
+
+    st = jax.random.normal(ks[0], (32, 64, 64, 16), jnp.float32)
+    dec = jax.nn.sigmoid(jax.random.normal(ks[1], (32, 64)))
+    us = time_fn(jax.jit(ref.ssd_scan), st, dec)
+    emit("kernels/ssd_scan_ref", us, "inter-chunk recurrence")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,73 @@
+"""Roofline report: reads results/dryrun.json and emits the per-cell table.
+
+Terms (seconds, per device):
+  t_compute    = HLO_FLOPs / peak_FLOPs          (197 TFLOP/s bf16, v5e)
+  t_memory     = HLO_bytes_streamed / HBM_bw     (819 GB/s)
+  t_collective = collective_bytes / link_bw      (~50 GB/s/link)
+All from the scan-aware HLO analysis of the compiled partitioned module
+(distributed/hlo_cost.py).  Also reports MODEL_FLOPS = 6·N·D (train) or
+2·N_active·D (decode) and the useful-compute ratio.
+"""
+
+import json
+import os
+import sys
+
+from benchmarks.common import emit
+
+DEFAULT = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "results", "dryrun.json")
+
+
+def fraction_of_roofline(r):
+    """ideal model-compute time / achievable step time (bounded by the max
+    term) — the score we hillclimb."""
+    rf = r.get("roofline", {})
+    bound = rf.get("roofline_bound_s", 0)
+    ideal = rf.get("ideal_compute_s", 0)
+    return ideal / bound if bound else 0.0
+
+
+def load(path=DEFAULT, tag=None):
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        recs = json.load(f)
+    out = []
+    for r in recs:
+        if "error" in r or "skipped" in r:
+            continue
+        if tag and r.get("tag") != tag:
+            continue
+        out.append(r)
+    return out
+
+
+def run(path=DEFAULT, tag="baseline", markdown=False):
+    recs = load(path, tag)
+    rows = []
+    for r in recs:
+        rf = r.get("roofline", {})
+        mesh = "multi" if r.get("multi_pod") else "single"
+        name = f"roofline/{r['arch']}/{r['shape']}/{mesh}"
+        frac = fraction_of_roofline(r)
+        emit(name, rf.get("roofline_bound_s", 0) * 1e6,
+             f"tc={rf.get('t_compute', 0):.4f}s tm={rf.get('t_memory', 0):.4f}s "
+             f"tx={rf.get('t_collective', 0):.4f}s dom={rf.get('dominant', '?')} "
+             f"frac_of_roofline={frac:.3f} useful={rf.get('useful_ratio', 0):.2f}")
+        rows.append((r["arch"], r["shape"], mesh, rf, frac,
+                     r.get("memory", {}).get("temp_size_in_bytes", 0)))
+    if markdown and rows:
+        print("\n| arch | shape | mesh | t_compute | t_memory | t_coll | dom | frac | temp GB/dev |")
+        print("|---|---|---|---|---|---|---|---|---|")
+        for a, s, m, rf, fr, tmp in rows:
+            print(f"| {a} | {s} | {m} | {rf.get('t_compute', 0):.4f} "
+                  f"| {rf.get('t_memory', 0):.4f} | {rf.get('t_collective', 0):.4f} "
+                  f"| {rf.get('dominant', '?')[2:]} | {fr:.3f} | {tmp/1e9:.1f} |")
+    return rows
+
+
+if __name__ == "__main__":
+    md = "--markdown" in sys.argv
+    tag = sys.argv[sys.argv.index("--tag") + 1] if "--tag" in sys.argv else "baseline"
+    run(tag=tag, markdown=md)

@@ -1,0 +1,34 @@
+"""Benchmark harness: one module per paper table + roofline + kernels.
+
+Prints ``name,us_per_call,derived`` CSV lines.
+
+  PYTHONPATH=src python -m benchmarks.run [table1 table2 ... roofline kernels]
+"""
+
+import sys
+
+from benchmarks import (higher_order, kernels_bench, roofline,
+                        table1_latency, table2_parallelism, table3_graphopt,
+                        table4_fifo)
+
+ALL = {
+    "table1": table1_latency.run,
+    "table2": table2_parallelism.run,
+    "table3": table3_graphopt.run,
+    "table4": table4_fifo.run,
+    "roofline": roofline.run,
+    "kernels": kernels_bench.run,
+    "higher_order": higher_order.run,       # opt-in: ~3 min FIFO search
+}
+DEFAULT = [n for n in ALL if n != "higher_order"]
+
+
+def main() -> None:
+    which = [a for a in sys.argv[1:] if not a.startswith("-")] or DEFAULT
+    print("name,us_per_call,derived")
+    for name in which:
+        ALL[name]()
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,53 @@
+"""End-to-end INR editing (paper Fig. 1B): encode an image as a SIREN,
+train an INSP-Net head to blur it IN WEIGHT SPACE, and execute the edited
+INR through the INR-Arch streaming pipeline.
+
+  PYTHONPATH=src python examples/inr_editing.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.siren import InspConfig, SirenConfig
+from repro.core.dataflow import map_to_dataflow
+from repro.core.executor import (buffered_total_bytes, streaming_peak_bytes)
+from repro.core.fifo_opt import optimize_fifo_depths
+from repro.core.passes import optimize
+from repro.core.trace import extract_graph
+from repro.inr.editing import gaussian_blur, train_insp_head, edited_inr
+from repro.inr.encode import (decode_inr, encode_inr, image_coords,
+                              synthetic_image)
+
+RES = 32
+scfg = SirenConfig(hidden_features=128, hidden_layers=3)
+icfg = InspConfig(hidden=64, layers=3, grad_order=2)
+
+print("1) encoding image as SIREN INR ...")
+img = synthetic_image(RES)
+params, mse = encode_inr(scfg, img, steps=600, lr=3e-4)
+print(f"   encode mse = {mse:.6f}")
+
+print("2) training INSP-Net head for Gaussian blur (weight-space edit) ...")
+target = gaussian_blur(img, 1.0)
+psi, emse = train_insp_head(scfg, icfg, params, target, steps=600, lr=2e-3)
+print(f"   edit-head mse = {emse:.6f}")
+
+print("3) compiling the edited INR with INR-Arch ...")
+g_fn = edited_inr(scfg, icfg, params, psi)
+x = image_coords(RES)[: scfg.batch]
+graph = extract_graph(g_fn, x)
+n_raw = len(graph)
+optimize(graph)
+design = map_to_dataflow(graph, block=64, mm_parallel=16)
+res = optimize_fifo_depths(design)
+print(f"   graph {n_raw} -> {len(graph)} nodes; "
+      f"FIFO depths {res.sum_before} -> {res.sum_after}")
+eager = buffered_total_bytes(graph)
+stream = streaming_peak_bytes(graph, design, res.depths_after)
+print(f"   memory: eager {eager/1e6:.2f} MB vs dataflow {stream/1e6:.2f} MB "
+      f"({eager/stream:.1f}x less)  [paper Table I: 1.7-8.9x]")
+
+print("4) evaluating the edited INR ...")
+out = g_fn(image_coords(RES)).reshape(RES, RES)
+mae = float(jnp.abs(out - target).mean())
+print(f"   edited-vs-blurred MAE over all pixels: {mae:.4f}")

@@ -1,0 +1,14 @@
+from repro.configs.base import (
+    ARCH_IDS,
+    SHAPES,
+    ModelConfig,
+    ShapeConfig,
+    all_configs,
+    cells,
+    get_config,
+)
+
+__all__ = [
+    "ARCH_IDS", "SHAPES", "ModelConfig", "ShapeConfig",
+    "all_configs", "cells", "get_config",
+]

@@ -1,0 +1,353 @@
+"""Dataflow architecture model + deadlock analysis (paper Secs. 3.1, 3.2.3).
+
+The ComputeGraph is mapped onto the INR-Arch dataflow architecture:
+  * every tensor edge becomes an ARRAY STREAM (a FIFO of blocks);
+  * every op becomes a stream KERNEL with a characteristic FIFO access
+    pattern (streaming / buffering / MM);
+  * nodes with multiple consumers get a COPY_STREAM multicaster that writes
+    each block to its outputs ROUND-ROBIN (paper's one-producer-one-consumer
+    rule — and the source of the Fig. 5 deadlock).
+
+From the mapped design we build the paper's DATAFLOW GRAPH (Fig. 6): nodes
+are FIFO read/write steps, edges are happens-before relations:
+  (a) intra-process program order           (trace order; depth-independent)
+  (b) read-after-write: write#n -> read#n   (depth-independent)
+  (c) write-after-read: read#(n-d) -> write#n for a FIFO of depth d
+A deadlock is exactly a cycle; latency is the longest path (with per-edge
+delays); observed FIFO depths come from peak occupancy under the node times.
+
+TPU adaptation: FIFO granularity is a BLOCK of the array stream (default 64
+elements = the paper's batch dimension) rather than one scalar per cycle —
+see DESIGN.md §2.  The analysis itself is granularity-invariant for the
+regular access patterns these kernels produce.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+from repro.core.graph import ComputeGraph, Node
+
+# ops that stream block-by-block with no buffering (1:1 or N:1)
+STREAMING_OPS = {
+    "Sin", "Cos", "Mul", "Add", "Sub", "Div", "Neg", "Exp", "Log", "Tanh",
+    "Pow", "IntPow", "Convert", "Select", "Maximum", "Minimum", "Identity",
+    "Rsqrt", "Sqrt", "Abs", "Sign", "Sigmoid", "Erf", "Broadcast",
+}
+# ops that must buffer their whole input before producing output
+BUFFERING_OPS = {"T", "Permute", "Reshape", "Sum", "Max", "Concat", "Slice", "Pad"}
+# matrix multiply: buffers the streamed operand, then emits output blocks
+MM_OPS = {"Mm"}
+
+
+@dataclass
+class Step:
+    """One program-order step of a process: FIFO ops happening together."""
+    reads: tuple = ()        # ((stream_id, index), ...)
+    writes: tuple = ()       # ((stream_id, index), ...)
+    delay: int = 1           # latency charged AFTER this step
+
+
+@dataclass
+class Stream:
+    id: int
+    src: str                 # tensor identity: "n{node}" producer
+    n_blocks: int
+    block_bytes: int
+    producer: str = ""
+    consumer: str = ""
+
+
+@dataclass
+class Process:
+    name: str
+    steps: list[Step] = field(default_factory=list)
+
+
+@dataclass
+class DataflowDesign:
+    processes: list[Process]
+    streams: dict[int, Stream]
+
+    def stream_ids(self):
+        return list(self.streams)
+
+    def sum_depths(self, depths: dict[int, int]) -> int:
+        return sum(depths.values())
+
+    def fifo_bytes(self, depths: dict[int, int]) -> int:
+        return sum(self.streams[s].block_bytes * d for s, d in depths.items())
+
+
+# ---------------------------------------------------------------------------
+# ComputeGraph -> DataflowDesign
+# ---------------------------------------------------------------------------
+
+def _n_blocks(node: Node, block: int) -> int:
+    return max(1, math.ceil(node.size / block))
+
+
+def map_to_dataflow(g: ComputeGraph, *, block: int = 64,
+                    mm_parallel: int = 64, dtype_bytes: int = 4
+                    ) -> DataflowDesign:
+    """Map an optimized ComputeGraph onto the dataflow architecture."""
+    consumers = g.consumers()
+    streams: dict[int, Stream] = {}
+    procs: list[Process] = []
+    sid = 0
+
+    # stream bookkeeping: for every (producer node, consumer node, arg slot)
+    # there is exactly one stream.  Multi-consumer producers go through a
+    # copy_stream process.
+    out_stream_of: dict[int, list[int]] = {}   # node -> streams it WRITES
+    in_streams_of: dict[int, list[int]] = {i: [] for i in g.nodes}
+
+    def new_stream(node: Node) -> int:
+        nonlocal sid
+        s = Stream(sid, f"n{node.id}", _n_blocks(node, block),
+                   block * dtype_bytes)
+        streams[s.id] = s
+        sid += 1
+        return s.id
+
+    order = g.topo_order()
+    # producer side: one output stream per node (to consumer or copier)
+    for nid in order:
+        node = g.nodes[nid]
+        if node.op == "Const":
+            continue                      # resident weights, not streamed
+        cons = [c for c in consumers[nid]
+                if g.nodes[c].op != "Const"]
+        # dedupe can leave the same node as MULTIPLE graph outputs
+        # (e.g. symmetric mixed partials) — each occurrence needs a stream
+        n_out = len(cons) + g.outputs.count(nid)
+        if n_out == 0:
+            out_stream_of[nid] = []
+            continue
+        if n_out == 1:
+            s = new_stream(node)
+            out_stream_of[nid] = [s]
+        else:
+            # producer -> copier stream, copier -> one stream per consumer
+            s_in = new_stream(node)
+            outs = [new_stream(node) for _ in range(n_out)]
+            out_stream_of[nid] = [s_in]
+            # copy_stream process: read block i, then write it to each
+            # output IN SEQUENCE (round-robin) — paper Sec. 3.1.2
+            cp = Process(f"copy{nid}")
+            nb = _n_blocks(node, block)
+            for i in range(nb):
+                cp.steps.append(Step(reads=((s_in, i),), delay=0))
+                for o in outs:
+                    cp.steps.append(Step(writes=((o, i),), delay=0))
+            cp.steps.append(Step(delay=1))
+            procs.append(cp)
+            out_stream_of[nid] = [s_in]
+            out_stream_of[(nid, "copies")] = outs
+
+    # wire consumer input streams in arg order
+    copy_cursor: dict[int, int] = {}
+    for nid in order:
+        node = g.nodes[nid]
+        for arg in node.inputs:
+            if g.nodes[arg].op == "Const":
+                in_streams_of[nid].append(-1)      # resident operand
+                continue
+            outs = out_stream_of.get((arg, "copies"))
+            if outs is None:
+                s = out_stream_of[arg][0]
+            else:
+                k = copy_cursor.get(arg, 0)
+                s = outs[k]
+                copy_cursor[arg] = k + 1
+        # (separate loop below fills names)
+            in_streams_of[nid].append(s)
+
+    # graph outputs read from the last copy (or the single stream)
+    sink_streams: list[int] = []
+    for o in g.outputs:
+        outs = out_stream_of.get((o, "copies"))
+        if outs is None:
+            sink_streams.append(out_stream_of[o][0])
+        else:
+            k = copy_cursor.get(o, 0)
+            sink_streams.append(outs[k])
+            copy_cursor[o] = k + 1
+
+    # build kernel processes
+    for nid in order:
+        node = g.nodes[nid]
+        if node.op == "Const":
+            continue
+        ins = [s for s in in_streams_of[nid] if s >= 0]
+        outs = out_stream_of.get(nid, [])
+        nb_out = _n_blocks(node, block)
+        p = Process(f"{node.op}{nid}")
+
+        if node.op == "Input":
+            for i in range(nb_out):
+                p.steps.append(Step(writes=tuple((s, i) for s in outs), delay=1))
+        elif node.op in MM_OPS and ins:
+            # buffer every streamed operand fully (round-robin across them),
+            # then emit output blocks at the MM initiation interval
+            nbs = [streams[s].n_blocks for s in ins]
+            for i in range(max(nbs)):
+                rd = tuple((s, i) for s, nb in zip(ins, nbs) if i < nb)
+                p.steps.append(Step(reads=rd, delay=1))
+            k_dim = node.shape[-1] if node.shape else 1
+            # II per output block ~ contraction work / parallelism
+            lhs = g.nodes[node.inputs[0]]
+            kk = lhs.shape[-1] if lhs.shape else 1
+            ii = max(1, math.ceil(kk / mm_parallel))
+            for i in range(nb_out):
+                p.steps.append(Step(writes=tuple((s, i) for s in outs), delay=ii))
+        elif node.op in BUFFERING_OPS and ins:
+            nbs = [streams[s].n_blocks for s in ins]
+            for i in range(max(nbs)):
+                rd = tuple((s, i) for s, nb in zip(ins, nbs) if i < nb)
+                p.steps.append(Step(reads=rd, delay=1))
+            for i in range(nb_out):
+                p.steps.append(Step(writes=tuple((s, i) for s in outs), delay=1))
+        elif ins:
+            # streaming: read block i from every input, write block i
+            nbs = [streams[s].n_blocks for s in ins]
+            nb = max([nb_out] + nbs)
+            for i in range(nb):
+                rd = tuple((s, i) for s, b in zip(ins, nbs) if i < b)
+                wr = tuple((s, i) for s in outs) if i < nb_out else ()
+                p.steps.append(Step(reads=rd, writes=wr, delay=1))
+        else:
+            # no streamed inputs (pure const computation): emit directly
+            for i in range(nb_out):
+                p.steps.append(Step(writes=tuple((s, i) for s in outs), delay=1))
+        if p.steps:
+            procs.append(p)
+
+    # sinks
+    for j, s in enumerate(sink_streams):
+        p = Process(f"sink{j}")
+        for i in range(streams[s].n_blocks):
+            p.steps.append(Step(reads=((s, i),), delay=1))
+        procs.append(p)
+
+    for p in procs:
+        for st in p.steps:
+            for (s, i) in st.writes:
+                streams[s].producer = p.name
+            for (s, i) in st.reads:
+                streams[s].consumer = p.name
+    return DataflowDesign(procs, streams)
+
+
+# ---------------------------------------------------------------------------
+# the dataflow (happens-before) graph
+# ---------------------------------------------------------------------------
+
+class DataflowGraph:
+    """Paper Fig. 6: nodes = FIFO-op steps; edges = happens-before.
+
+    Construction is two-phase, mirroring the paper: the UNCONSTRAINED graph
+    (intra-process order + RAW) is built once; WAR edges are added per
+    depth assignment and can be swapped cheaply while searching depths.
+    """
+
+    def __init__(self, design: DataflowDesign):
+        self.design = design
+        self.n = 0
+        self.node_of_step: list[list[int]] = []
+        self.base_edges: list[tuple[int, int, int]] = []   # (u, v, delay)
+        # per stream: ordered node id of write#i / read#i
+        self.writes: dict[int, list[int]] = {s: [] for s in design.streams}
+        self.reads: dict[int, list[int]] = {s: [] for s in design.streams}
+        self._build()
+
+    def _build(self):
+        d = self.design
+        for p in d.processes:
+            prev = None
+            prev_delay = 0
+            for st in p.steps:
+                nid = self.n
+                self.n += 1
+                if prev is not None:
+                    self.base_edges.append((prev, nid, prev_delay))
+                for (s, i) in st.writes:
+                    w = self.writes[s]
+                    assert len(w) == i, (p.name, s, i, len(w))
+                    w.append(nid)
+                for (s, i) in st.reads:
+                    r = self.reads[s]
+                    assert len(r) == i, (p.name, s, i, len(r))
+                    r.append(nid)
+                prev = nid
+                prev_delay = st.delay
+        # RAW: write#n -> read#n
+        for s in d.streams:
+            for w, r in zip(self.writes[s], self.reads[s]):
+                self.base_edges.append((w, r, 1))
+
+    def war_edges(self, depths: dict[int, int]) -> list[tuple[int, int, int]]:
+        """WAR: write#n depends on read#(n-d) for FIFO depth d."""
+        out = []
+        for s, d in depths.items():
+            ws, rs = self.writes[s], self.reads[s]
+            for n in range(d, len(ws)):
+                if n - d < len(rs):
+                    out.append((rs[n - d], ws[n], 0))
+        return out
+
+    # -- analyses ------------------------------------------------------
+
+    def _adj(self, extra):
+        adj: list[list[tuple[int, int]]] = [[] for _ in range(self.n)]
+        indeg = [0] * self.n
+        for (u, v, w) in self.base_edges:
+            adj[u].append((v, w))
+            indeg[v] += 1
+        for (u, v, w) in extra:
+            adj[u].append((v, w))
+            indeg[v] += 1
+        return adj, indeg
+
+    def check(self, depths: dict[int, int] | None = None):
+        """Kahn topological pass.  Returns (deadlocked, latency, times).
+
+        deadlocked=True  <=> a cycle exists (paper Sec. 3.2.3);
+        latency = max completion time over nodes (paper Sec. 3.2.4)."""
+        extra = self.war_edges(depths) if depths else []
+        adj, indeg = self._adj(extra)
+        times = [0] * self.n
+        stack = [i for i in range(self.n) if indeg[i] == 0]
+        seen = 0
+        while stack:
+            u = stack.pop()
+            seen += 1
+            tu = times[u]
+            for (v, w) in adj[u]:
+                if tu + w > times[v]:
+                    times[v] = tu + w
+                indeg[v] -= 1
+                if indeg[v] == 0:
+                    stack.append(v)
+        deadlocked = seen < self.n
+        latency = max(times) if not deadlocked and times else 0
+        return deadlocked, latency, times
+
+    def observed_depths(self, depths: dict[int, int] | None = None,
+                        minimum: int = 2) -> dict[int, int]:
+        """Peak FIFO occupancy per stream under the schedule implied by node
+        times (paper: 'actual FIFO depths observed ... in the simulation')."""
+        dead, _, times = self.check(depths)
+        assert not dead, "cannot observe depths of a deadlocked design"
+        out: dict[int, int] = {}
+        for s in self.design.streams:
+            events = [(times[w], 0, +1) for w in self.writes[s]]
+            events += [(times[r], 1, -1) for r in self.reads[s]]
+            events.sort()
+            occ = peak = 0
+            for (_, _, delta) in events:
+                occ += delta
+                peak = max(peak, occ)
+            out[s] = max(peak, minimum)
+        return out

@@ -1,0 +1,357 @@
+"""Graph executors: buffered reference vs. block-streaming (paper Sec. 3.1).
+
+* ``reference_executor`` evaluates the ComputeGraph op-by-op in topological
+  order, materializing every intermediate — the CPU/GPU-style buffered
+  execution the paper compares against.
+
+* ``streaming_executor`` is the TPU-native analogue of the INR-Arch dataflow
+  architecture: const-derived tensors (weights, their transposes, broadcast
+  constants) are PRECOMPUTED RESIDENTS (the paper keeps weights on-chip);
+  every Input-derived tensor is streamed in blocks along the batch dimension
+  through a fused per-block pipeline (``lax.map`` over blocks), so peak live
+  memory is residents + one block's working set — the role the FIFO streams
+  play on the FPGA.
+
+Both are built from the same IR, so they agree numerically (tests assert it).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import ComputeGraph, Node
+
+
+def _p(node: Node, key, default=None):
+    return dict(node.params).get(key, default)
+
+
+def _eval_node(node: Node, args, block_b: int | None = None):
+    """Evaluate one IR node given operand values."""
+    op = node.op
+    shape = node.shape
+    if block_b is not None and len(shape) > 0:
+        shape = (block_b, *shape[1:])
+    if op == "Mm":
+        return args[0] @ args[1]
+    if op == "T":
+        return args[0].T
+    if op == "Permute":
+        return jnp.transpose(args[0], _p(node, "permutation"))
+    if op == "Sin":
+        return jnp.sin(args[0])
+    if op == "Cos":
+        return jnp.cos(args[0])
+    if op == "Mul":
+        return args[0] * args[1]
+    if op == "Add":
+        return args[0] + args[1]
+    if op == "Sub":
+        return args[0] - args[1]
+    if op == "Div":
+        return args[0] / args[1]
+    if op == "Neg":
+        return -args[0]
+    if op == "Exp":
+        return jnp.exp(args[0])
+    if op == "Log":
+        return jnp.log(args[0])
+    if op == "Tanh":
+        return jnp.tanh(args[0])
+    if op == "Rsqrt":
+        return jax.lax.rsqrt(args[0])
+    if op == "Sqrt":
+        return jnp.sqrt(args[0])
+    if op == "Abs":
+        return jnp.abs(args[0])
+    if op == "Sign":
+        return jnp.sign(args[0])
+    if op == "Sigmoid":
+        return jax.nn.sigmoid(args[0])
+    if op == "Erf":
+        return jax.lax.erf(args[0])
+    if op == "IntPow":
+        return jax.lax.integer_pow(args[0], _p(node, "y"))
+    if op == "Pow":
+        return args[0] ** args[1]
+    if op == "Maximum":
+        return jnp.maximum(args[0], args[1])
+    if op == "Minimum":
+        return jnp.minimum(args[0], args[1])
+    if op == "Select":
+        return jnp.where(args[0], args[1], args[2])
+    if op == "Convert":
+        return args[0].astype(node.dtype)
+    if op == "Identity":
+        return args[0]
+    if op == "Broadcast":
+        bdims = _p(node, "broadcast_dimensions", ())
+        out = args[0]
+        if block_b is not None and 0 in bdims and out.ndim and out.shape[0] != 1:
+            # operand carries the batch dim: expand around it
+            pass
+        return jax.lax.broadcast_in_dim(out, shape, bdims)
+    if op == "Reshape":
+        return args[0].reshape(shape)
+    if op == "Sum":
+        return jnp.sum(args[0], axis=_p(node, "axes"))
+    if op == "Max":
+        return jnp.max(args[0], axis=_p(node, "axes"))
+    if op == "Concat":
+        return jnp.concatenate(args, axis=_p(node, "dimension"))
+    if op == "Slice":
+        start = list(_p(node, "start_indices"))
+        limit = list(_p(node, "limit_indices"))
+        strides = _p(node, "strides") or [1] * len(start)
+        if block_b is not None and args[0].ndim:
+            # batch dim is never sliced in a streamable graph
+            start[0], limit[0] = 0, args[0].shape[0]
+        return jax.lax.slice(args[0], start, limit, list(strides))
+    if op == "Pad":
+        cfg_pad = list(_p(node, "padding_config"))
+        return jax.lax.pad(args[0], args[1].astype(args[0].dtype) if hasattr(args[1],'astype') else args[1], cfg_pad)
+    if op == "Iota":
+        return jax.lax.broadcasted_iota(node.dtype, shape, _p(node, "dimension", 0))
+    raise NotImplementedError(f"executor: op {op} ({node.params})")
+
+
+def _classify(g: ComputeGraph):
+    """Split nodes into const-derived (resident) and stream-carried."""
+    resident: set[int] = set()
+    for nid in g.topo_order():
+        n = g.nodes[nid]
+        if n.op == "Const":
+            resident.add(nid)
+        elif n.op == "Input":
+            continue
+        elif n.inputs and all(i in resident for i in n.inputs):
+            resident.add(nid)
+    streamed = [nid for nid in g.topo_order() if nid not in resident]
+    return resident, streamed
+
+
+def _row_const(g: ComputeGraph, resident: set[int]) -> set[int]:
+    """Residents whose rows (axis 0) are all identical, so slicing [:block]
+    is valid.  Provenance-based — a weight whose dim0 merely COINCIDES with
+    the batch size must never be sliced.  Typical members: the all-ones
+    cotangent seed of reverse mode and everything derived from it."""
+    rc: set[int] = set()
+    elementwise = {"Sin", "Cos", "Mul", "Add", "Sub", "Div", "Neg", "Exp",
+                   "Log", "Tanh", "Rsqrt", "Sqrt", "Abs", "Sign", "Sigmoid",
+                   "Erf", "IntPow", "Pow", "Maximum", "Minimum", "Select",
+                   "Convert", "Identity"}
+
+    def arg_ok(i, out_rank):
+        """Operand is row-const, or broadcasts without touching axis 0."""
+        return i in rc or len(g.nodes[i].shape) < out_rank
+
+    for nid in g.topo_order():
+        if nid not in resident:
+            continue
+        n = g.nodes[nid]
+        rank = len(n.shape)
+        if n.op == "Const":
+            if rank == 0 or (n.const is not None and n.shape and n.shape[0] > 0
+                             and bool(np.all(n.const == n.const[:1]))):
+                rc.add(nid)
+        elif n.op == "Broadcast":
+            bdims = tuple(_p(n, "broadcast_dimensions", ()))
+            if 0 not in bdims:
+                rc.add(nid)                     # axis 0 is freshly broadcast
+            elif bdims and bdims[0] == 0 and n.inputs[0] in rc:
+                rc.add(nid)                     # operand axis0 (row-const) maps up
+        elif n.op == "Pad":
+            pc = _p(n, "padding_config", ())
+            if pc and tuple(pc[0]) == (0, 0, 0) and n.inputs[0] in rc:
+                rc.add(nid)
+        elif n.op == "Slice":
+            if n.inputs and n.inputs[0] in rc:
+                rc.add(nid)
+        elif n.op == "Mm":
+            if n.inputs and n.inputs[0] in rc:
+                rc.add(nid)                     # identical lhs rows -> identical out rows
+        elif n.op == "Sum":
+            axes = tuple(_p(n, "axes", ()))
+            if n.inputs and n.inputs[0] in rc and 0 not in axes:
+                rc.add(nid)
+        elif n.op in elementwise and n.inputs:
+            if all(arg_ok(i, rank) for i in n.inputs):
+                rc.add(nid)
+    return rc
+
+
+def reference_executor(g: ComputeGraph):
+    """Returns f(*inputs) evaluating the graph op-by-op (buffered)."""
+    order = g.topo_order()
+
+    def f(*inputs):
+        env: dict[int, jax.Array] = {}
+        for nid in order:
+            n = g.nodes[nid]
+            if n.op == "Input":
+                env[nid] = inputs[_p(n, "idx")]
+            elif n.op == "Const":
+                env[nid] = jnp.asarray(n.const)
+            else:
+                env[nid] = _eval_node(n, [env[i] for i in n.inputs])
+        return tuple(env[o] for o in g.outputs)
+    return f
+
+
+def check_streamable(g: ComputeGraph) -> bool:
+    """Every stream-carried tensor must keep the batch dim in axis 0."""
+    resident, streamed = _classify(g)
+    inputs = [n for n in g.nodes.values() if n.op == "Input"]
+    if not inputs:
+        return False
+    B = inputs[0].shape[0] if inputs[0].shape else None
+    if B is None:
+        return False
+    for nid in streamed:
+        n = g.nodes[nid]
+        if n.op == "Input":
+            if not n.shape or n.shape[0] != B:
+                return False
+            continue
+        if not n.shape or n.shape[0] != B:
+            return False
+        # batch dim must not be contracted/permuted away
+        if n.op == "Mm":
+            lhs = g.nodes[n.inputs[0]]
+            if lhs.id not in resident and lhs.shape[0] != B:
+                return False
+        if n.op in ("T",):
+            return False                      # transposing batch out of axis 0
+        if n.op == "Permute":
+            perm = _p(n, "permutation")
+            if perm and perm[0] != 0:
+                return False
+        if n.op == "Slice":
+            start = _p(n, "start_indices")
+            inp = g.nodes[n.inputs[0]]
+            if start and (start[0] != 0 or _p(n, "limit_indices")[0] != inp.shape[0]):
+                return False
+        if n.op == "Pad":
+            pc = _p(n, "padding_config")
+            if pc and tuple(pc[0]) != (0, 0, 0):
+                return False
+    return True
+
+
+def streaming_executor(g: ComputeGraph, block: int = 8):
+    """Returns f(*inputs) that executes the graph as a block pipeline.
+
+    Residents are computed once; the batch dim is split into blocks and the
+    whole stream-carried subgraph runs per block under ``lax.map`` (the
+    dataflow pipeline).  Peak live memory ~ residents + one block working set.
+    """
+    assert check_streamable(g), "graph is not batch-streamable"
+    resident_ids, streamed = _classify(g)
+    rowconst = _row_const(g, resident_ids)
+    order = g.topo_order()
+    inputs_nodes = sorted((n for n in g.nodes.values() if n.op == "Input"),
+                          key=lambda n: _p(n, "idx"))
+    B = inputs_nodes[0].shape[0]
+    block = min(block, B)
+    assert B % block == 0, (B, block)
+    n_blocks = B // block
+
+    def f(*inputs):
+        # phase 1: residents (weights, transposed weights, const broadcasts)
+        res_env: dict[int, jax.Array] = {}
+        for nid in order:
+            n = g.nodes[nid]
+            if nid not in resident_ids:
+                continue
+            if n.op == "Const":
+                res_env[nid] = jnp.asarray(n.const)
+            else:
+                res_env[nid] = _eval_node(n, [res_env[i] for i in n.inputs])
+
+        # phase 2: stream blocks
+        def block_fn(xblk):
+            env: dict[int, jax.Array] = {}
+            for nid in streamed:
+                n = g.nodes[nid]
+                if n.op == "Input":
+                    env[nid] = xblk[_p(n, "idx")]
+                    continue
+                args = []
+                for i in n.inputs:
+                    if i in resident_ids:
+                        a = res_env[i]
+                        # broadcast-row-constant residents shrink to one
+                        # block; weights (even if dim0 == B) stay whole
+                        if i in rowconst and a.ndim and a.shape[:1] == (B,):
+                            a = a[:block]
+                        args.append(a)
+                    else:
+                        args.append(env[i])
+                env[nid] = _eval_node(n, args, block_b=block)
+            return tuple(env[o] for o in g.outputs)
+
+        xblocks = tuple(x.reshape(n_blocks, block, *x.shape[1:]) for x in inputs)
+        outs = jax.lax.map(block_fn, xblocks)
+        return tuple(o.reshape(B, *o.shape[2:]) for o in outs)
+    return f
+
+
+# ---------------------------------------------------------------------------
+# analytic memory accounting (paper Table I "Memory" analogue)
+# ---------------------------------------------------------------------------
+
+def _nbytes(node: Node) -> int:
+    return node.size * jnp.dtype(node.dtype).itemsize
+
+
+def buffered_peak_bytes(g: ComputeGraph) -> int:
+    """Liveness-based peak memory of the buffered schedule (an OPTIMISTIC
+    baseline: real eager frameworks do not pack this tightly).  Parameters
+    (Const nodes) are never freed."""
+    order = g.topo_order()
+    last_use: dict[int, int] = {}
+    for t, nid in enumerate(order):
+        for i in g.nodes[nid].inputs:
+            last_use[i] = t
+    for o in g.outputs:
+        last_use[o] = len(order)
+    live = 0
+    peak = 0
+    for t, nid in enumerate(order):
+        live += _nbytes(g.nodes[nid])
+        peak = max(peak, live)
+        for i in g.nodes[nid].inputs:
+            if last_use.get(i) == t and g.nodes[i].op != "Const":
+                live -= _nbytes(g.nodes[i])
+    return peak
+
+
+def buffered_total_bytes(g: ComputeGraph) -> int:
+    """Sum of every tensor in the graph — the eager-framework analogue the
+    paper's CPU/GPU baselines exhibit (each kernel allocates its output;
+    intermediates are not liveness-packed within the op stream)."""
+    return sum(_nbytes(n) for n in g.nodes.values())
+
+
+def streaming_peak_bytes(g: ComputeGraph, design, depths: dict[int, int]) -> int:
+    """Residents + FIFO memory (depths x block bytes) — the dataflow memory.
+
+    Row-constant residents (reverse-mode seeds and their derivatives) store
+    ONE row — their content is identical across the batch, so the dataflow
+    design re-broadcasts a single block."""
+    resident_ids, _ = _classify(g)
+    rc = _row_const(g, resident_ids)
+    res = 0
+    for i in resident_ids:
+        n = g.nodes[i]
+        b = _nbytes(n)
+        if i in rc and n.shape and n.shape[0] > 1:
+            b //= n.shape[0]
+        res += b
+    fifo = design.fifo_bytes(depths)
+    return res + fifo

@@ -1,0 +1,70 @@
+"""Gradient compression with error feedback (distributed-optimization trick).
+
+int8 quantization with a per-tensor scale cuts cross-pod gradient traffic 4x
+(f32) / 2x (bf16).  Error feedback accumulates the quantization residual into
+the next step's gradient, which keeps SGD/Adam convergence (Seide et al.;
+Karimireddy et al.).  Two entry points:
+
+  * `compress_grads` / state-carrying pure functions — used inside train_step
+    regardless of mesh;
+  * `compressed_psum` — a shard_map collective that all-reduces the QUANTIZED
+    representation across an axis, for explicit-collective deployments.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _quantize(x: jax.Array):
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-30) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize(q: jax.Array, scale: jax.Array):
+    return q.astype(jnp.float32) * scale
+
+
+def init_error_feedback(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_grads(grads, ef_state):
+    """Returns (compressed-and-restored grads, new error feedback).
+
+    The returned grads are exactly what the OTHER hosts would see after the
+    quantized all-reduce; ef' carries the residual into the next step."""
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, s = _quantize(corrected)
+        restored = _dequantize(q, s)
+        return restored, corrected - restored
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(ef_state)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (jax.tree.unflatten(tdef, [o[0] for o in outs]),
+            jax.tree.unflatten(tdef, [o[1] for o in outs]))
+
+
+def compression_ratio(grads) -> float:
+    """Bytes on the wire: int8 payload + one f32 scale per tensor."""
+    orig = sum(g.size * g.dtype.itemsize for g in jax.tree.leaves(grads))
+    comp = sum(g.size * 1 + 4 for g in jax.tree.leaves(grads))
+    return orig / comp
+
+
+def compressed_psum(x: jax.Array, axis_name: str):
+    """All-reduce int8-quantized values along a mesh axis (inside shard_map).
+
+    All participants must quantize on a COMMON scale (a per-shard scale can't
+    be factored out of the sum), so: (1) pmax the local maxima — a scalar
+    collective, (2) quantize against the global scale, (3) exact int32 psum
+    of the int8 payloads.  Per-participant error <= scale/2, so the reduced
+    error is <= n*scale/2 (covered by error feedback at the caller)."""
+    gmax = jax.lax.pmax(jnp.max(jnp.abs(x)), axis_name)
+    scale = jnp.maximum(gmax, 1e-30) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    qsum = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    return qsum.astype(jnp.float32) * scale

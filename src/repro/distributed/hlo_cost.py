@@ -1,0 +1,449 @@
+"""Scan-aware HLO cost analysis.
+
+XLA's ``compiled.cost_analysis()`` counts while-loop (lax.scan) bodies ONCE,
+not multiplied by trip count — useless for scan-over-layers models.  This
+module parses optimized HLO text, builds the computation call graph, extracts
+``known_trip_count`` from while ops, and aggregates:
+
+  * flops            — dot_general: 2 * |result| * |contracting|; elementwise ~ |result|
+  * bytes_raw        — per-op operand+result bytes (CPU-fusion granularity)
+  * bytes_streamed   — fusion-aware traffic: single-consumer elementwise ops
+                       are assumed to stream through registers/VMEM (this is
+                       exactly the INR-Arch dataflow assumption applied as an
+                       analytical memory model for TPU)
+  * collective bytes — per collective type, operand bytes, x trip counts
+
+All numbers are per-device (the module is post-SPMD-partitioning).
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+    "f8e4m3b11fnuz": 1, "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute", "ragged-all-to-all")
+
+# ops that are pure data movement / bookkeeping: no flops, no traffic
+_FREE_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "bitcast-convert",
+    "opt-barrier", "get-dimension-size",
+}
+
+# elementwise-ish ops eligible for streaming fusion in bytes_streamed
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "exponential", "log", "negate", "sine", "cosine", "tanh", "rsqrt",
+    "sqrt", "abs", "sign", "floor", "ceil", "convert", "compare", "select",
+    "and", "or", "not", "xor", "clamp", "exponential-minus-one",
+    "log-plus-one", "broadcast", "reshape", "transpose", "copy", "slice",
+    "concatenate", "pad", "reverse", "atan2", "remainder", "shift-left",
+    "shift-right-logical", "shift-right-arithmetic", "reduce-precision",
+    "is-finite", "erf", "cbrt", "logistic", "round-nearest-afz",
+    "round-nearest-even", "stochastic-convert", "real", "imag", "map",
+}
+
+_TRANSCENDENTAL = {"exponential", "log", "tanh", "rsqrt", "sqrt", "sine",
+                   "cosine", "power", "logistic", "erf", "atan2",
+                   "exponential-minus-one", "log-plus-one", "cbrt"}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->\s*(.+?)\s*\{\s*$")
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*?(\d+)')
+_CALLS_RE = re.compile(r"(?:calls|to_apply|body)=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_KIND_RE = re.compile(r"([\w\-]+)\(")
+
+
+def _parse_op_line(line: str):
+    """Parse `[ROOT] %name = TYPE kind(operands...), attrs` robustly.
+
+    Tuple result types may contain `/*index=N*/` comments (which include `=`),
+    so this is a manual scan, not a single regex.  Returns
+    (name, result_type, kind, operand_names, line) or None."""
+    s = line.strip()
+    if s.startswith("ROOT "):
+        s = s[5:]
+    if not s.startswith("%"):
+        return None
+    eq = s.find(" = ")
+    if eq < 0:
+        return None
+    name = s[:eq].lstrip("%").strip()
+    rest = s[eq + 3:]
+    if rest.startswith("("):
+        close = rest.find(")")
+        if close < 0:
+            return None
+        rtype = rest[:close + 1]
+        rest2 = rest[close + 1:].lstrip()
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        rtype = rest[:sp]
+        rest2 = rest[sp + 1:].lstrip()
+    km = _KIND_RE.match(rest2)
+    if not km:
+        return None
+    kind = km.group(1)
+    depth = 0
+    buf = []
+    for ch in rest2[km.end() - 1:]:
+        if ch == "(":
+            depth += 1
+            if depth == 1:
+                continue
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        buf.append(ch)
+    operands = _OPERAND_RE.findall("".join(buf))
+    return name, rtype, kind, operands, s
+
+
+def type_bytes(type_str: str) -> int:
+    """Bytes of an HLO type string (handles tuples)."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def type_elems(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n
+    return total
+
+
+@dataclass
+class Op:
+    name: str
+    kind: str
+    result_type: str
+    line: str
+    operands: list[str] = field(default_factory=list)
+
+
+@dataclass
+class Computation:
+    name: str
+    params: dict[str, str] = field(default_factory=dict)   # name -> type
+    ops: list[Op] = field(default_factory=list)
+    types: dict[str, str] = field(default_factory=dict)    # symbol table
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    transcendentals: float = 0.0
+    bytes_raw: float = 0.0
+    bytes_streamed: float = 0.0
+    collectives: dict = field(default_factory=lambda: {c: {"count": 0.0, "bytes": 0.0}
+                                                       for c in COLLECTIVES})
+    by_kind: dict = field(default_factory=dict)      # kind -> streamed bytes
+
+    def _bk(self, kind: str, nbytes: float):
+        self.by_kind[kind] = self.by_kind.get(kind, 0.0) + nbytes
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.transcendentals += other.transcendentals * mult
+        self.bytes_raw += other.bytes_raw * mult
+        self.bytes_streamed += other.bytes_streamed * mult
+        for c in COLLECTIVES:
+            self.collectives[c]["count"] += other.collectives[c]["count"] * mult
+            self.collectives[c]["bytes"] += other.collectives[c]["bytes"] * mult
+        for k, v in other.by_kind.items():
+            self.by_kind[k] = self.by_kind.get(k, 0.0) + v * mult
+
+    @property
+    def collective_bytes(self) -> float:
+        return sum(v["bytes"] for v in self.collectives.values())
+
+    def as_dict(self) -> dict:
+        top = dict(sorted(self.by_kind.items(), key=lambda kv: -kv[1])[:12])
+        return {"flops": self.flops, "transcendentals": self.transcendentals,
+                "bytes_raw": self.bytes_raw, "bytes_streamed": self.bytes_streamed,
+                "collective_bytes": self.collective_bytes,
+                "collectives": self.collectives, "bytes_by_kind_top": top}
+
+
+def parse_computations(hlo: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        m = _HEADER_RE.match(line)
+        if m and ("->" in line):
+            cur = Computation(name=m.group(2))
+            # parse params "a.1: f32[256,256], b: (s32[], f32[2])"
+            ptxt = m.group(3)
+            for pm in re.finditer(r"%?([\w.\-]+)\s*:\s*((?:\([^()]*\)|[a-z0-9]+\[[\d,]*\](?:\{[\d,]*\})?))", ptxt):
+                cur.params[pm.group(1)] = pm.group(2)
+                cur.types[pm.group(1)] = pm.group(2)
+            comps[cur.name] = cur
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        parsed = _parse_op_line(line)
+        if parsed is None:
+            continue
+        name, rtype, kind, operands, s = parsed
+        op = Op(name=name, kind=kind, result_type=rtype, line=s,
+                operands=operands)
+        cur.ops.append(op)
+        cur.types[name] = rtype
+    return comps
+
+
+def _consumer_counts(comp: Computation) -> dict[str, int]:
+    counts: dict[str, int] = {}
+    for op in comp.ops:
+        for o in op.operands:
+            counts[o] = counts.get(o, 0) + 1
+    return counts
+
+
+def _fusion_traffic(called: Computation, fallback_obytes: float,
+                    result_type: str) -> float:
+    """HBM traffic of one fusion call, accounting for sliced reads and
+    in-place updates.
+
+    A scan body receives the full stacked-layer parameter arrays and
+    dynamic-slices one layer per iteration: the real read is the slice, not
+    the whole array.  Likewise a fusion whose root is dynamic-update-slice
+    writes only the updated window (in-place on TPU).
+    """
+    traffic = 0.0
+    # reads: per parameter, count slice results if ALL consumers slice it;
+    # a param that is only the TARGET of dynamic-update-slice is updated
+    # in place on TPU — no read of the full buffer
+    for pname, ptype in called.params.items():
+        consumers = [op for op in called.ops if pname in op.operands]
+        if consumers and all(c.kind in ("dynamic-slice", "slice", "gather")
+                             for c in consumers):
+            traffic += sum(type_bytes(c.result_type) for c in consumers)
+        elif consumers and all(c.kind == "dynamic-update-slice"
+                               and c.operands and c.operands[0] == pname
+                               for c in consumers):
+            pass
+        else:
+            traffic += type_bytes(ptype)
+    if not called.params:
+        traffic += fallback_obytes
+    # writes: root DUS (or tuple of DUSes) updates in place; chase through
+    # elementwise wrappers (convert/copy/bitcast) that XLA fuses on top
+    def _resolve_dus(name):
+        op = next((o for o in called.ops if o.name == name), None)
+        hops = 0
+        while op is not None and hops < 8:
+            if op.kind == "dynamic-update-slice":
+                return op
+            if op.kind in ("convert", "copy", "bitcast") and op.operands:
+                op = next((o for o in called.ops
+                           if o.name == op.operands[0]), None)
+                hops += 1
+                continue
+            return None
+        return None
+
+    root = called.ops[-1] if called.ops else None
+    if root is not None and root.kind == "tuple":
+        wbytes = 0.0
+        for o in root.operands:
+            dus = _resolve_dus(o)
+            if dus is not None and len(dus.operands) > 1:
+                wbytes += 2 * type_bytes(called.types.get(dus.operands[1], ""))
+            else:
+                wbytes += type_bytes(called.types.get(o, ""))
+        traffic += wbytes
+    elif root is not None:
+        dus = _resolve_dus(root.name)
+        if dus is not None and len(dus.operands) > 1:
+            traffic += 2 * type_bytes(called.types.get(dus.operands[1], ""))
+        else:
+            traffic += type_bytes(result_type)
+    else:
+        traffic += type_bytes(result_type)
+    return traffic
+
+
+def analyze(hlo: str) -> dict:
+    """Full scan-aware analysis of optimized HLO text. Returns cost dict for
+    the entry computation, with while bodies multiplied by trip counts."""
+    comps = parse_computations(hlo)
+    entry = None
+    for line in hlo.splitlines():
+        if line.startswith("ENTRY"):
+            m = _HEADER_RE.match(line)
+            if m:
+                entry = m.group(2)
+    if entry is None:  # fall back: last computation
+        entry = list(comps)[-1] if comps else None
+
+    memo: dict[str, Cost] = {}
+    visiting: set[str] = set()
+
+    def comp_cost(cname: str) -> Cost:
+        if cname in memo:
+            return memo[cname]
+        if cname not in comps or cname in visiting:
+            return Cost()
+        visiting.add(cname)
+        comp = comps[cname]
+        cost = Cost()
+        consumers = _consumer_counts(comp)
+        for op in comp.ops:
+            k = op.kind
+            if k in _FREE_OPS:
+                continue
+            base = k.removesuffix("-start").removesuffix("-done")
+            if k.endswith("-done"):
+                continue
+            rbytes = type_bytes(op.result_type)
+            relems = type_elems(op.result_type)
+            obytes = sum(type_bytes(comp.types.get(o, "")) for o in op.operands)
+
+            if base in COLLECTIVES:
+                cost.collectives[base]["count"] += 1
+                cost.collectives[base]["bytes"] += obytes or rbytes
+                cost.bytes_raw += rbytes + obytes
+                cost.bytes_streamed += rbytes + obytes
+                cost._bk(base, rbytes + obytes)
+                continue
+
+            if k == "while":
+                trip = 1
+                tm = _TRIP_RE.search(op.line)
+                if tm:
+                    trip = int(tm.group(1))
+                body = _CALLS_RE.search(op.line)
+                condm = _COND_RE.search(op.line)
+                if body:
+                    cost.add(comp_cost(body.group(1)), trip)
+                if condm:
+                    cost.add(comp_cost(condm.group(1)), trip)
+                # loop state traffic is internal; count one pass of carry
+                cost.bytes_raw += rbytes
+                cost.bytes_streamed += rbytes
+                cost._bk("while-carry", rbytes)
+                continue
+
+            if k == "conditional":
+                bm = _BRANCHES_RE.search(op.line)
+                if bm:
+                    branch_costs = [comp_cost(b.strip().lstrip("%"))
+                                    for b in bm.group(1).split(",")]
+                    if branch_costs:
+                        best = max(branch_costs, key=lambda c: c.flops)
+                        cost.add(best)
+                cost.bytes_raw += rbytes + obytes
+                cost.bytes_streamed += rbytes + obytes
+                continue
+
+            if k in ("fusion", "call", "custom-call", "reduce", "scatter",
+                     "sort", "select-and-scatter", "reduce-window", "map"):
+                called = _CALLS_RE.search(op.line)
+                traffic = rbytes + obytes
+                if called and k in ("fusion", "call"):
+                    sub = comp_cost(called.group(1))
+                    # flops/collectives inside count; traffic is at the boundary
+                    cost.flops += sub.flops
+                    cost.transcendentals += sub.transcendentals
+                    for c in COLLECTIVES:
+                        cost.collectives[c]["count"] += sub.collectives[c]["count"]
+                        cost.collectives[c]["bytes"] += sub.collectives[c]["bytes"]
+                    if called.group(1) in comps:
+                        traffic = _fusion_traffic(
+                            comps[called.group(1)], obytes, op.result_type)
+                if k == "reduce":
+                    cost.flops += sum(type_elems(comp.types.get(o, ""))
+                                      for o in op.operands) / max(len(op.operands), 1)
+                cost.bytes_raw += rbytes + obytes
+                cost.bytes_streamed += traffic
+                cost._bk(k, traffic)
+                continue
+
+            if k in ("dot", "dot-general"):
+                # flops = 2 * |result| * prod(lhs contracting dims)
+                lhs_type = comp.types.get(op.operands[0], "") if op.operands else ""
+                cdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
+                contract = 1
+                if cdims and lhs_type:
+                    m2 = _SHAPE_RE.search(lhs_type)
+                    if m2 and m2.group(2):
+                        dims = [int(d) for d in m2.group(2).split(",")]
+                        for ci in cdims.group(1).split(","):
+                            if ci != "":
+                                contract *= dims[int(ci)]
+                cost.flops += 2.0 * relems * contract
+                cost.bytes_raw += rbytes + obytes
+                cost.bytes_streamed += rbytes + obytes
+                cost._bk("dot", rbytes + obytes)
+                continue
+
+            if k in ("dynamic-update-slice",):
+                upd = (type_bytes(comp.types.get(op.operands[1], ""))
+                       if len(op.operands) > 1 else rbytes)
+                cost.bytes_raw += 2 * upd          # in-place on TPU
+                cost.bytes_streamed += 2 * upd
+                cost._bk("dus", 2 * upd)
+                continue
+            if k in ("dynamic-slice", "gather"):
+                cost.bytes_raw += 2 * rbytes
+                cost.bytes_streamed += 2 * rbytes
+                cost._bk(k, 2 * rbytes)
+                continue
+
+            # generic / elementwise
+            if base in _TRANSCENDENTAL:
+                cost.transcendentals += relems
+                cost.flops += 4.0 * relems
+            else:
+                cost.flops += float(relems)
+            cost.bytes_raw += rbytes + obytes
+            if base in _ELEMENTWISE and consumers.get(op.name, 0) <= 1:
+                # streams through on a fused TPU pipeline
+                pass
+            else:
+                cost.bytes_streamed += rbytes + obytes
+                cost._bk("ew:" + k, rbytes + obytes)
+        visiting.discard(cname)
+        memo[cname] = cost
+        return cost
+
+    total = comp_cost(entry) if entry else Cost()
+    return total.as_dict()
+
+
+def analyze_compiled(compiled) -> dict:
+    return analyze(compiled.as_text())

@@ -1,0 +1,81 @@
+"""End-to-end INR editing (paper Fig. 1B / Sec. 2.3).
+
+Train an INSP-Net head so that INSP(features of INR) matches a pixel-space
+transformation of the underlying image (here: Gaussian blur or sharpening —
+both are differential-operator-like, which is exactly why gradient features
+suffice, per Xu et al. [12]).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+import repro.optim.adam as A
+from repro.configs.siren import InspConfig, SirenConfig
+from repro.inr.encode import image_coords
+from repro.inr.gradnet import feature_vector, num_features
+from repro.inr.insp import insp_apply, insp_init
+from repro.inr.siren import siren_fn
+
+
+def gaussian_blur(img, sigma: float = 1.0):
+    r = int(3 * sigma)
+    xs = jnp.arange(-r, r + 1)
+    k = jnp.exp(-0.5 * (xs / sigma) ** 2)
+    k = k / k.sum()
+    out = jax.vmap(lambda row: jnp.convolve(row, k, mode="same"))(img)
+    out = jax.vmap(lambda col: jnp.convolve(col, k, mode="same"))(out.T).T
+    return out
+
+
+def sharpen(img, amount: float = 1.0):
+    return img + amount * (img - gaussian_blur(img, 1.0))
+
+
+def train_insp_head(siren_cfg: SirenConfig, insp_cfg: InspConfig,
+                    siren_params, target_img, *, steps: int = 300,
+                    lr: float = 1e-3, batch: int = 512, key=None):
+    """Fit psi so INSP(features(x)) ~= target_img(x).  Returns (psi, mse)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    res = target_img.shape[0]
+    coords = image_coords(res)
+    target = target_img.reshape(-1, 1)
+
+    f = siren_fn(siren_cfg, siren_params)
+    feats = feature_vector(f, insp_cfg.grad_order)
+    nf = num_features(siren_cfg.in_features, siren_cfg.out_features,
+                      insp_cfg.grad_order)
+    psi = insp_init(insp_cfg, nf, siren_cfg.out_features, key)
+
+    def loss_fn(p, idx):
+        pred = insp_apply(p, feats(coords[idx]))
+        return jnp.mean((pred - target[idx]) ** 2)
+
+    ocfg = A.AdamWConfig(lr=lr, weight_decay=0.0, clip_norm=0.0,
+                         warmup_steps=0, total_steps=steps, min_lr_frac=1.0)
+    opt = A.init_opt_state(psi)
+    step = jnp.zeros((), jnp.int32)
+
+    @jax.jit
+    def train_step(p, opt, step, k):
+        idx = jax.random.randint(k, (batch,), 0, coords.shape[0])
+        l, g = jax.value_and_grad(loss_fn)(p, idx)
+        p, opt, _ = A.adamw_update(ocfg, p, g, opt, step)
+        return p, opt, step + 1, l
+
+    loss = None
+    for k in jax.random.split(key, steps):
+        psi, opt, step, loss = train_step(psi, opt, step, k)
+    return psi, float(loss)
+
+
+def edited_inr(siren_cfg: SirenConfig, insp_cfg: InspConfig, siren_params, psi):
+    """The composite 'edited' INR g(x) = INSP(features_f(x)) — the function
+    whose computation graph INR-Arch compiles to hardware."""
+    f = siren_fn(siren_cfg, siren_params)
+    feats = feature_vector(f, insp_cfg.grad_order)
+
+    def g(x):
+        return insp_apply(psi, feats(x))
+    return g

@@ -1,0 +1,74 @@
+"""n-th order input-gradient computations of an INR (paper Sec. 2.1, 2.3).
+
+INSP-Net consumes [y, ∂y/∂x, ∂²y/∂x², ...] as features.  Following the paper
+(and PyTorch autograd), gradients are built by REPEATED REVERSE-MODE
+differentiation — this is what creates the redundant, exponentially-growing
+computation graphs that INR-Arch's compiler optimizes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gradient_outputs(f, order: int):
+    """Returns g(x) -> tuple(y, dy, d2y, ..., d^order y) for a single
+    coordinate x: [in].  Output k has shape [out] + [in]*k."""
+    fns = [f]
+    for _ in range(order):
+        fns.append(jax.jacrev(fns[-1]))
+
+    def g(x):
+        return tuple(fn(x) for fn in fns)
+    return g
+
+
+def batched_gradients(f, order: int):
+    """vmap over a batch of coordinates: x [B, in] -> tuple of [B, ...]."""
+    g = gradient_outputs(f, order)
+    return jax.vmap(g)
+
+
+def feature_vector(f, order: int):
+    """x [B, in] -> concatenated flat feature matrix [B, F] where
+    F = out * (1 + in + in^2 + ... + in^order)."""
+    bg = batched_gradients(f, order)
+
+    def feats(x):
+        outs = bg(x)
+        return jnp.concatenate([o.reshape(x.shape[0], -1) for o in outs], -1)
+    return feats
+
+
+def num_features(in_features: int, out_features: int, order: int) -> int:
+    return out_features * sum(in_features ** k for k in range(order + 1))
+
+
+def paper_gradients(f, order: int, out_features: int, in_features: int):
+    """PyTorch-autograd-faithful gradient builder (paper Sec. 3.2.2).
+
+    INSP-Net calls ``torch.autograd.grad`` once per scalar output with
+    ``create_graph=True``; each call re-traces a full backward graph, and the
+    graphs share almost all of their computation — the redundancy the paper's
+    de-duplication pass removes.  We reproduce that structure with one
+    ``jax.grad`` per (channel, index-path), using the batch-sum trick so the
+    batch stays an explicit 2-D tensor dim (as in the paper's array streams).
+
+    Returns g(x: [B, in]) -> tuple of arrays:
+      y [B, out], then per channel: dy_c [B, in], then per (c, i): d2y_ci [B, in], ...
+    """
+    def g(x):
+        outs = [f(x)]
+        # order-1 closures per output channel
+        level = [(lambda z, c=c: f(z)[:, c].sum()) for c in range(out_features)]
+        for _ in range(order):
+            grads = [jax.grad(s) for s in level]
+            outs.extend(gr(x) for gr in grads)
+            nxt = []
+            for gr in grads:
+                for i in range(in_features):
+                    nxt.append(lambda z, gr=gr, i=i: gr(z)[:, i].sum())
+            level = nxt
+        return tuple(outs)
+    return g

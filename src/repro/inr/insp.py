@@ -1,0 +1,44 @@
+"""INSP-Net (Xu et al. [12]) — the editing head the paper accelerates.
+
+An MLP over [y, ∂y/∂x, ∂²y/∂x², ...] features of a SIREN INR.  Training the
+head against a pixel-space transformation (blur, denoise, ...) makes the
+composite network an INR of the EDITED image without ever decoding to pixels.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.siren import InspConfig, SirenConfig
+from repro.inr.gradnet import feature_vector, num_features
+
+
+def insp_init(cfg: InspConfig, in_features: int, out_features: int, key):
+    sizes = [in_features] + [cfg.hidden] * (cfg.layers - 1) + [out_features]
+    params = []
+    keys = jax.random.split(key, len(sizes) - 1)
+    for k, (fi, fo) in zip(keys, zip(sizes[:-1], sizes[1:])):
+        k1, k2 = jax.random.split(k)
+        w = jax.random.normal(k1, (fi, fo), jnp.float32) / jnp.sqrt(fi)
+        params.append({"w": w, "b": jnp.zeros((fo,), jnp.float32)})
+    return params
+
+
+def insp_apply(params, feats):
+    h = feats
+    for i, layer in enumerate(params):
+        h = h @ layer["w"] + layer["b"]
+        if i < len(params) - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+def insp_pipeline(siren_cfg: SirenConfig, insp_cfg: InspConfig, f):
+    """Returns edited(x, psi): INSP head `psi` applied to INR gradient
+    features of `f` — the full computation the paper maps to hardware."""
+    feats = feature_vector(f, insp_cfg.grad_order)
+
+    def edited(x, psi):
+        return insp_apply(psi, feats(x))
+    return edited

@@ -1,0 +1,22 @@
+"""Shared Pallas utilities.
+
+TPU is the TARGET; on this CPU container every kernel runs through
+``interpret=True`` (Pallas executes the kernel body in Python), which the
+tests use to validate against the pure-jnp oracles in ref.py.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(a: int, b: int) -> int:
+    return cdiv(a, b) * b

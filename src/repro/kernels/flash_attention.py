@@ -1,0 +1,118 @@
+"""flash_attention — blockwise attention Pallas kernel (forward).
+
+Causal + optional sliding-window attention with the running-max/sum online
+softmax.  Grid = (batch*kv_heads*q_groups, q_blocks, kv_blocks); the kv-block
+axis is innermost so the VMEM scratch accumulator persists across kv steps
+for a fixed output tile (the Pallas revisiting pattern).  GQA is handled by
+folding the group into the batch axis of q.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import interpret_default
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+               scale: float, causal: bool, window: int, bq: int, bk: int,
+               kv_steps: int, seq_kv: int, q_offset: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0]                      # [bq, d] (leading grid-batch dim is 1)
+    k = k_ref[0]                      # [bk, d]
+    v = v_ref[0]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+
+    q_pos = (q_offset + qi * bq
+             + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0))
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = k_pos < seq_kv
+    if causal:
+        mask &= q_pos >= k_pos
+    if window > 0:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(-1)
+    acc_ref[...] = (acc_ref[...] * corr[:, None]
+                    + jnp.dot(p.astype(v.dtype), v,
+                              preferred_element_type=jnp.float32))
+    m_ref[...] = m_new
+
+    @pl.when(ki == kv_steps - 1)
+    def _emit():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0, bq: int = 256,
+                    bk: int = 256, interpret: bool | None = None):
+    """q: [B, Sq, H, D]; k, v: [B, Sk, KH, D]; H = KH*G.  Returns [B, Sq, H, D].
+
+    `window` must be a static int (0 = global) — the Pallas kernel
+    specializes the mask at trace time.
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    B, Sq, H, D = q.shape
+    _, Sk, KH, _ = k.shape
+    G = H // KH
+    scale = 1.0 / math.sqrt(D)
+    bq = min(bq, Sq)
+    bk = min(bk, Sk)
+    pq, pk_ = (-Sq) % bq, (-Sk) % bk
+
+    # fold GQA: q -> [B*KH*G, Sq, D] rows grouped so each maps to one kv head
+    qf = q.reshape(B, Sq, KH, G, D).transpose(0, 2, 3, 1, 4).reshape(B * KH * G, Sq, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * KH, Sk, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * KH, Sk, D)
+    if pq:
+        qf = jnp.pad(qf, ((0, 0), (0, pq), (0, 0)))
+    if pk_:
+        kf = jnp.pad(kf, ((0, 0), (0, pk_), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, pk_), (0, 0)))
+    Sqp, Skp = Sq + pq, Sk + pk_
+    kv_steps = Skp // bk
+
+    out = pl.pallas_call(
+        functools.partial(_fa_kernel, scale=scale, causal=causal,
+                          window=window, bq=bq, bk=bk, kv_steps=kv_steps,
+                          seq_kv=Sk, q_offset=Sk - Sq),
+        grid=(B * KH * G, Sqp // bq, kv_steps),
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b // G, j, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * KH * G, Sqp, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, D), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    out = out[:, :Sq]
+    return out.reshape(B, KH, G, Sq, D).transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, D)

@@ -1,0 +1,86 @@
+"""fused_chain — a streaming-kernel segment as one Pallas kernel.
+
+INR-Arch's library composes 1:1 stream kernels (Sin, Cos, Mul-by-const, ...)
+through FIFOs; the codegen's TPU analogue fuses a contiguous segment of
+streaming ops into ONE kernel that reads a block from HBM, applies the whole
+chain in VMEM/VREGs, and writes one block back — the entire segment costs a
+single round-trip of memory traffic regardless of chain length.
+
+The chain is a static list of (op, operand) tuples evaluated inside the
+kernel body at trace time:
+    [("sin", None), ("scale", 30.0), ("add_row", bias), ("mul", other)]
+`add_row`/`mul` take a second streamed input of matching block shape.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import interpret_default
+
+UNARY = {
+    "sin": jnp.sin, "cos": jnp.cos, "exp": jnp.exp, "tanh": jnp.tanh,
+    "neg": lambda x: -x, "abs": jnp.abs, "relu": lambda x: jnp.maximum(x, 0),
+    "sigmoid": jax.nn.sigmoid, "silu": jax.nn.silu, "square": jnp.square,
+}
+BINARY = {"mul", "add", "sub", "div"}
+
+
+def _chain_kernel(*refs, chain, n_extra):
+    x_ref = refs[0]
+    extra = refs[1:1 + n_extra]
+    o_ref = refs[1 + n_extra]
+    h = x_ref[...].astype(jnp.float32)
+    ei = 0
+    for op, operand in chain:
+        if op in UNARY:
+            h = UNARY[op](h)
+        elif op == "scale":
+            h = h * operand
+        elif op == "offset":
+            h = h + operand
+        elif op in BINARY:
+            other = extra[ei][...].astype(jnp.float32)
+            ei += 1
+            if op == "mul":
+                h = h * other
+            elif op == "add":
+                h = h + other
+            elif op == "sub":
+                h = h - other
+            else:
+                h = h / other
+        else:
+            raise ValueError(f"fused_chain: unknown op {op}")
+    o_ref[...] = h.astype(o_ref.dtype)
+
+
+def fused_chain(x: jax.Array, chain, extras=(), *, block_rows: int = 256,
+                interpret: bool | None = None):
+    """Apply `chain` to x: [R, C] streaming block_rows rows at a time."""
+    if interpret is None:
+        interpret = interpret_default()
+    R, C = x.shape
+    br = min(block_rows, R)
+    pad = (-R) % br
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+        extras = tuple(jnp.pad(e, ((0, pad), (0, 0))) for e in extras)
+    Rp = R + pad
+    n_extra = len(extras)
+    n_bin = sum(1 for op, _ in chain if op in BINARY)
+    assert n_bin == n_extra, (n_bin, n_extra)
+
+    out = pl.pallas_call(
+        functools.partial(_chain_kernel, chain=tuple(chain), n_extra=n_extra),
+        grid=(Rp // br,),
+        in_specs=[pl.BlockSpec((br, C), lambda i: (i, 0))] * (1 + n_extra),
+        out_specs=pl.BlockSpec((br, C), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Rp, C), x.dtype),
+        interpret=interpret,
+    )(x, *extras)
+    return out[:R]

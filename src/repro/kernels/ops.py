@@ -1,0 +1,27 @@
+"""jit'd public wrappers for the Pallas kernel library."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.fused_chain import fused_chain as _chain
+from repro.kernels.siren_layer import siren_layer as _siren
+from repro.kernels.ssd_scan import ssd_scan as _ssd
+from repro.kernels.stream_matmul import stream_matmul as _mm
+
+stream_matmul = jax.jit(partial(_mm), static_argnames=(
+    "bm", "bn", "bk", "out_dtype", "interpret"))
+siren_layer = jax.jit(partial(_siren), static_argnames=(
+    "w0", "apply_sin", "bm", "bn", "bk", "interpret"))
+fused_chain = jax.jit(partial(_chain), static_argnames=(
+    "chain", "block_rows", "interpret"))
+flash_attention = jax.jit(partial(_flash), static_argnames=(
+    "causal", "window", "bq", "bk", "interpret"))
+ssd_scan = jax.jit(partial(_ssd), static_argnames=("interpret",))
+
+__all__ = ["stream_matmul", "siren_layer", "fused_chain", "flash_attention",
+           "ssd_scan", "ref"]

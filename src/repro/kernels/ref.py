@@ -1,0 +1,79 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def stream_matmul(a, b, out_dtype=None):
+    out_dtype = out_dtype or a.dtype
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def siren_layer(x, w, b, *, w0=30.0, apply_sin=True):
+    h = jnp.dot(x, w, preferred_element_type=jnp.float32) + b.astype(jnp.float32)
+    if apply_sin:
+        h = jnp.sin(w0 * h)
+    return h.astype(x.dtype)
+
+
+def fused_chain(x, chain, extras=()):
+    from repro.kernels.fused_chain import BINARY, UNARY
+    h = x.astype(jnp.float32)
+    ei = 0
+    for op, operand in chain:
+        if op in UNARY:
+            h = UNARY[op](h)
+        elif op == "scale":
+            h = h * operand
+        elif op == "offset":
+            h = h + operand
+        elif op in BINARY:
+            o = extras[ei].astype(jnp.float32)
+            ei += 1
+            h = {"mul": h * o, "add": h + o, "sub": h - o, "div": h / o}[op]
+        else:
+            raise ValueError(op)
+    return h.astype(x.dtype)
+
+
+def flash_attention(q, k, v, *, causal=True, window=0):
+    """Dense reference attention with the same masking semantics."""
+    B, Sq, H, D = q.shape
+    _, Sk, KH, _ = k.shape
+    G = H // KH
+    qf = q.reshape(B, Sq, KH, G, D)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, k,
+                   preferred_element_type=jnp.float32) / math.sqrt(D)
+    q_pos = (Sk - Sq) + jnp.arange(Sq)
+    k_pos = jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= q_pos[:, None] >= k_pos[None, :]
+    if window > 0:
+        mask &= (q_pos[:, None] - k_pos[None, :]) < window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def ssd_scan(states, chunk_decay):
+    """prev[c] = S_{c-1};  S_c = decay_c * S_{c-1} + states_c  (S_{-1}=0)."""
+    BH, NC, P, N = states.shape
+
+    def body(s, inp):
+        st, d = inp
+        return s * d + st, s
+
+    def per_bh(st, dec):
+        _, prev = jax.lax.scan(
+            body, jnp.zeros((P, N), jnp.float32),
+            (st.astype(jnp.float32), dec.astype(jnp.float32)))
+        return prev
+
+    return jax.vmap(per_bh)(states, chunk_decay)

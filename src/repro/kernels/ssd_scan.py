@@ -1,0 +1,56 @@
+"""ssd_scan — Mamba2 inter-chunk state recurrence as a Pallas kernel.
+
+The chunked SSD algorithm is parallel within chunks; the SEQUENTIAL part is
+the inter-chunk recurrence  S_c = decay_c * S_{c-1} + states_c, which on TPU
+wants the state resident in VMEM across the whole scan instead of
+round-tripping through HBM each chunk (the lax.scan carry).  Grid =
+(batch*heads, n_chunks) with the chunk axis innermost; the VMEM scratch holds
+S between chunk steps and the kernel emits S_{c-1} (the state each chunk's
+off-diagonal term consumes).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import interpret_default
+
+
+def _ssd_kernel(states_ref, decay_ref, prev_ref, s_ref):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    prev_ref[0, 0] = s_ref[...].astype(prev_ref.dtype)
+    d = decay_ref[0, 0]
+    s_ref[...] = s_ref[...] * d + states_ref[0, 0].astype(jnp.float32)
+
+
+def ssd_scan(states: jax.Array, chunk_decay: jax.Array, *,
+             interpret: bool | None = None):
+    """states: [BH, NC, P, N]; chunk_decay: [BH, NC] ->
+    prev_states: [BH, NC, P, N] with prev[c] = S_{c-1} (S_{-1} = 0)."""
+    if interpret is None:
+        interpret = interpret_default()
+    BH, NC, P, N = states.shape
+
+    out = pl.pallas_call(
+        _ssd_kernel,
+        grid=(BH, NC),
+        in_specs=[
+            pl.BlockSpec((1, 1, P, N), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1), lambda b, c: (b, c)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, P, N), lambda b, c: (b, c, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, NC, P, N), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(states, chunk_decay)
+    return out

@@ -1,0 +1,328 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture x input shape x mesh) cell:
+  jit(step).lower(abstract inputs).compile()
+on the production meshes (single-pod 16x16 = 256 chips; multi-pod 2x16x16 =
+512 chips), then extract:
+  * memory_analysis()  -> bytes per device (proves it fits)
+  * cost_analysis()    -> HLO FLOPs / bytes for the roofline
+  * collective bytes   -> parsed from the optimized HLO text
+Results are appended to a JSON file consumed by benchmarks/roofline.py.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out results/dryrun.json
+"""
+
+import argparse
+import json
+import math
+import re
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import SHAPES, ARCH_IDS, get_config
+from repro.distributed import hlo_cost
+from repro.distributed.sharding import ShardingPolicy
+from repro.launch import mesh as meshlib
+from repro.launch import steps as steplib
+from repro.models import zoo
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _bytes_of_type(s: str) -> int:
+    """Sum bytes over every `dtype[d0,d1,...]` group in an HLO type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(s):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum operand bytes of every collective op in optimized HLO."""
+    out = {op: {"count": 0, "bytes": 0} for op in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\([^)]*\)|[\w\[\],{}\/ ]+?)\s+"
+                     r"([\w\-]+)\(", line)
+        if not m:
+            continue
+        opname = m.group(2)
+        base = opname.removesuffix("-start").removesuffix("-done")
+        if base not in out or opname.endswith("-done"):
+            continue
+        # operand types: everything inside the call parens
+        call = line[line.index(opname + "(") + len(opname) + 1:]
+        depth = 1
+        args = []
+        for ch in call:
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            args.append(ch)
+        operand_bytes = _bytes_of_type("".join(args))
+        if operand_bytes == 0:
+            # fallback: result type
+            operand_bytes = _bytes_of_type(m.group(1))
+        out[base]["count"] += 1
+        out[base]["bytes"] += operand_bytes
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items()
+                             if isinstance(v, dict))
+    return out
+
+
+def _mem_dict(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    if ma is None:
+        return {}
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "generated_code_size_in_bytes",
+            "alias_size_in_bytes", "peak_memory_in_bytes")
+    return {k: int(getattr(ma, k)) for k in keys if hasattr(ma, k)}
+
+
+def _cost_dict(compiled) -> dict:
+    """XLA's own cost analysis — kept for reference only; it does NOT
+    multiply while/scan bodies by trip count (see distributed/hlo_cost)."""
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    keep = {}
+    for k, v in dict(ca).items():
+        if k in ("flops", "bytes accessed", "optimal_seconds", "transcendentals"):
+            keep[k] = float(v)
+    return keep
+
+
+def lower_cell(arch: str, shape_name: str, mesh, hp: steplib.HParams):
+    """Lower+compile one cell; returns (record, compiled)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if not cfg.supports_shape(shape):
+        return {"arch": arch, "shape": shape_name, "skipped":
+                "long_500k needs sub-quadratic attention"}, None
+    policy = ShardingPolicy(mesh, seq_parallel=hp.seq_parallel,
+                            extra_rules=hp.extra_rules)
+    t0 = time.time()
+
+    if shape.kind == "train":
+        step = steplib.build_train_step(cfg, hp, policy)
+        state_sh = steplib._to_shardings(mesh, steplib.state_specs(cfg, policy))
+        batch_sh = steplib._to_shardings(mesh, steplib.batch_specs(cfg, shape, policy))
+        jitted = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                         out_shardings=(state_sh, None),
+                         donate_argnums=(0,) if hp.donate else ())
+        args = (steplib.abstract_state(cfg), zoo.input_structs(cfg, shape))
+    elif shape.kind == "prefill":
+        step = steplib.build_prefill_step(cfg, hp, policy)
+        pspec = steplib.param_specs(cfg, policy)
+        p_sh = steplib._to_shardings(mesh, pspec)
+        batch_sh = steplib._to_shardings(mesh, steplib.batch_specs(cfg, shape, policy))
+        cache = zoo.init_cache(cfg, shape.global_batch, shape.seq_len, abstract=True)
+        cache_sh = steplib._to_shardings(mesh, steplib.cache_specs(cfg, policy, cache))
+        jitted = jax.jit(step, in_shardings=(p_sh, batch_sh),
+                         out_shardings=(None, cache_sh))
+        args = (steplib.serving_params_struct(cfg, hp),
+                zoo.input_structs(cfg, shape))
+    else:  # decode
+        step = steplib.build_serve_step(cfg, hp, policy)
+        pspec = steplib.param_specs(cfg, policy)
+        p_sh = steplib._to_shardings(mesh, pspec)
+        cache = zoo.init_cache(cfg, shape.global_batch, shape.seq_len, abstract=True)
+        cache_sh = steplib._to_shardings(mesh, steplib.cache_specs(cfg, policy, cache))
+        tok_sh = NamedSharding(mesh, steplib.batch_specs(cfg, shape, policy)["tokens"])
+        pos_sh = NamedSharding(mesh, P())
+        jitted = jax.jit(step,
+                         in_shardings=(p_sh, cache_sh, tok_sh, pos_sh),
+                         out_shardings=(None, cache_sh),
+                         donate_argnums=(1,) if hp.donate else ())
+        structs = zoo.input_structs(cfg, shape)
+        args = (steplib.serving_params_struct(cfg, hp), cache,
+                structs["tokens"], structs["pos"])
+
+    lowered = jitted.lower(*args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    hlo = compiled.as_text()
+    n_dev = math.prod(mesh.shape.values())
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "kind": shape.kind,
+        "mesh": dict(mesh.shape),
+        "n_devices": n_dev,
+        "params": cfg.count_params(),
+        "active_params": cfg.count_active_params(),
+        "tokens": shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1),
+        "hp": {"remat": hp.remat, "seq_parallel": hp.seq_parallel,
+               "vocab_chunk": hp.vocab_chunk, "attn_impl": hp.attn_impl,
+               "donate": hp.donate, "accum": hp.accum,
+               "cast_once": hp.cast_once},
+        "memory": _mem_dict(compiled),
+        "cost": _cost_dict(compiled),
+        "hlo_cost": hlo_cost.analyze(hlo),   # scan-aware, per-device
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+    }
+    return rec, compiled
+
+
+def roofline_terms(rec: dict) -> dict:
+    """Three roofline terms (seconds) from a dry-run record.
+
+    The scan-aware hlo_cost analysis is per-device (the module is
+    post-SPMD-partitioning), so terms are per-device seconds directly;
+    collective bytes are per-device operand bytes summed over ops, divided by
+    one ICI link's bandwidth (conservative serialized bound; a v5e chip has
+    more links but collectives on one mesh axis serialize per direction).
+    """
+    cost = rec.get("hlo_cost", {})
+    flops = cost.get("flops", 0.0)
+    byts = cost.get("bytes_streamed", 0.0)
+    coll = cost.get("collective_bytes", 0.0)
+    t_compute = flops / meshlib.PEAK_FLOPS_BF16
+    t_memory = byts / meshlib.HBM_BW
+    t_coll = coll / meshlib.ICI_BW
+    terms = {"t_compute": t_compute, "t_memory": t_memory,
+             "t_collective": t_coll}
+    dom = max(terms, key=terms.get)
+    n = rec.get("active_params", rec.get("params", 0))
+    d = rec.get("tokens", 0)
+    model_flops = (6 if rec.get("kind") == "train" else 2) * n * d
+    model_flops_per_dev = model_flops / max(rec.get("n_devices", 1), 1)
+    terms.update({
+        "dominant": dom,
+        "model_flops_per_dev": model_flops_per_dev,
+        "useful_ratio": model_flops_per_dev / flops if flops else 0.0,
+        "roofline_bound_s": max(terms["t_compute"], terms["t_memory"],
+                                terms["t_collective"]),
+        "ideal_compute_s": model_flops_per_dev / meshlib.PEAK_FLOPS_BF16,
+    })
+    return terms
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun.json")
+    ap.add_argument("--remat", default="dots")
+    ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--vocab-chunk", type=int, default=0)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--attn-impl", default="flash",
+                    choices=["flash", "flash_cvjp", "pallas"])
+    ap.add_argument("--cast-once", action="store_true")
+    ap.add_argument("--constrain-proj", action="store_true")
+    ap.add_argument("--grad-cast", action="store_true")
+    ap.add_argument("--no-attn-tp", action="store_true",
+                    help="replicate attention params over the model axis "
+                         "(for head counts that do not divide it)")
+    ap.add_argument("--no-donate", action="store_true")
+    ap.add_argument("--tag", default="baseline")
+    args = ap.parse_args()
+
+    extra = ({"q_dim": (), "kv_dim": (), "o_in": ()}
+             if args.no_attn_tp else None)
+    hp = steplib.HParams(remat=args.remat, seq_parallel=args.seq_parallel,
+                         vocab_chunk=args.vocab_chunk, accum=args.accum,
+                         attn_impl=args.attn_impl,
+                         cast_once=args.cast_once,
+                         constrain_proj=args.constrain_proj,
+                         grad_cast=args.grad_cast,
+                         extra_rules=extra,
+                         donate=not args.no_donate)
+
+    cells = []
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                cells.append((a, s, mp))
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    results = []
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+    done = {(r.get("arch"), r.get("shape"), r.get("multi_pod"), r.get("tag"))
+            for r in results}
+
+    for arch, shape_name, mp in cells:
+        key = (arch, shape_name, mp, args.tag)
+        if key in done:
+            print(f"[skip-done] {key}", flush=True)
+            continue
+        mesh = meshlib.make_production_mesh(multi_pod=mp)
+        label = f"{arch} x {shape_name} x {'multi' if mp else 'single'}-pod"
+        print(f"[dryrun] {label} ...", flush=True)
+        try:
+            rec, compiled = lower_cell(arch, shape_name, mesh, hp)
+            rec["multi_pod"] = mp
+            rec["tag"] = args.tag
+            if compiled is not None:
+                rec["roofline"] = roofline_terms(rec)
+                print(f"  ok: compile={rec['compile_s']}s "
+                      f"flops/dev={rec['hlo_cost']['flops']:.3e} "
+                      f"coll={rec['hlo_cost']['collective_bytes']:.3e}B "
+                      f"temp={rec['memory'].get('temp_size_in_bytes', 0)/1e9:.1f}GB "
+                      f"dom={rec['roofline']['dominant']}", flush=True)
+                del compiled
+            else:
+                print(f"  skipped: {rec['skipped']}", flush=True)
+        except Exception as e:
+            rec = {"arch": arch, "shape": shape_name, "multi_pod": mp,
+                   "tag": args.tag, "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-2000:]}
+            print(f"  FAIL: {rec['error']}", flush=True)
+        results.append(rec)
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+    n_err = sum(1 for r in results if "error" in r)
+    print(f"[dryrun] wrote {args.out}: {len(results)} records, {n_err} errors")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

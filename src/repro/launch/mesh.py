@@ -1,0 +1,48 @@
+"""Production meshes.
+
+`make_production_mesh` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state.  The dry-run forces 512
+host platform devices (see launch/dryrun.py); everything else sees 1 CPU.
+
+Mesh layout:
+  single pod:  (16, 16)     -> ("data", "model")      256 chips (one v5e pod)
+  multi pod:   (2, 16, 16)  -> ("pod", "data", "model")  512 chips
+The "model" axis carries TP/EP (ICI-bound, intra-pod); "data" (+"pod") carry
+batch/FSDP sharding whose gradient reductions cross the DCN between pods.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    ndev = math.prod(shape)
+    devs = jax.devices()
+    if len(devs) < ndev:
+        raise RuntimeError(
+            f"mesh {shape} needs {ndev} devices, found {len(devs)}; "
+            "run under XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "(launch/dryrun.py does this automatically)")
+    return jax.make_mesh(
+        shape, axes, devices=devs[:ndev],
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_debug_mesh(n_data: int = 2, n_model: int = 2):
+    """Small mesh for in-process sharding tests (subprocess with forced devices)."""
+    ndev = n_data * n_model
+    return jax.make_mesh(
+        (n_data, n_model), ("data", "model"), devices=jax.devices()[:ndev],
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+# v5e hardware constants for the roofline model
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link (~)
+CHIPS_PER_POD = 256

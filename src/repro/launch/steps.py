@@ -1,0 +1,219 @@
+"""Step builders: sharded train / prefill / serve steps for every arch.
+
+These close over (ModelConfig, HParams) and are pure functions suitable for
+``jax.jit`` with explicit in/out shardings.  `abstract_state` /
+`state_shardings` / `batch_shardings` provide everything the dry-run and the
+real launcher need.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed.sharding import ShardingPolicy, ACT_RULES
+from repro.models import zoo
+from repro.models.template import ParamSpec, abstract_params, init_params
+from repro.optim import adam
+
+
+@dataclass(frozen=True)
+class HParams:
+    """Performance/behavior knobs (the hillclimb levers)."""
+    remat: str = "dots"              # none | dots | full
+    attn_impl: str = "flash"         # flash | pallas
+    vocab_chunk: int = 0             # 0 = unchunked CE
+    seq_parallel: bool = False       # shard activations' seq dim over "model"
+    serve_dtype: str = "bfloat16"    # params dtype for serving
+    donate: bool = True
+    accum: int = 1                   # gradient-accumulation microbatches
+    cast_once: bool = False          # cast f32 master -> bf16 ONCE per step
+                                     # (outside the accumulation scan)
+    constrain_proj: bool = False     # constrain attn/mlp outputs so TP
+                                     # all-reduce happens on bf16 tensors
+    grad_cast: bool = False          # bf16 cotangent barrier per layer
+    extra_rules: dict | None = None  # sharding-policy rule overrides
+    optimizer: adam.AdamWConfig = field(default_factory=adam.AdamWConfig)
+    aux_coef: float = 0.01
+
+
+# ---------------------------------------------------------------------------
+# state / shardings
+# ---------------------------------------------------------------------------
+
+def param_specs(cfg: ModelConfig, policy: ShardingPolicy):
+    tmpl = zoo.model_template(cfg)
+    return jax.tree.map(
+        lambda ps: policy.spec(ps.shape, ps.logical),
+        tmpl, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def state_specs(cfg: ModelConfig, policy: ShardingPolicy):
+    pspec = param_specs(cfg, policy)
+    return {"params": pspec,
+            "opt": {"mu": pspec, "nu": pspec},
+            "step": P()}
+
+
+def abstract_state(cfg: ModelConfig):
+    ap = abstract_params(zoo.model_template(cfg))
+    return {"params": ap,
+            "opt": adam.abstract_opt_state(ap),
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def init_state(cfg: ModelConfig, key):
+    params = init_params(zoo.model_template(cfg), key)
+    return {"params": params,
+            "opt": adam.init_opt_state(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def _to_shardings(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, policy: ShardingPolicy):
+    structs = zoo.input_structs(cfg, shape)
+    logical = {
+        "tokens": ("batch",) if shape.kind == "decode" else ("batch", "seq"),
+        "labels": ("batch", "seq"),
+        "embeds": ("batch", "seq", "act_embed"),
+        "image_embeds": ("batch", "image", "act_embed"),
+        "pos": (),
+    }
+    return {k: policy.act_spec(v.shape, logical[k]) for k, v in structs.items()}
+
+
+# --- decode cache logical axes (mirrors zoo.init_cache structure) ----------
+
+def _kv_logical(cfg: ModelConfig, policy: ShardingPolicy, lead: int):
+    model = policy.mesh.shape.get("model", 1)
+    if cfg.n_kv_heads % model == 0:
+        tail = ("batch", "seq_kv", "act_kv_heads", None)
+    else:
+        tail = ("batch", "seq_shard", None, None)
+    return ("stack",) * lead + tail
+
+
+def cache_specs(cfg: ModelConfig, policy: ShardingPolicy, cache_tree):
+    """PartitionSpec tree matching zoo.init_cache(abstract=True)."""
+    def spec_for(path, leaf):
+        names = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+        key = names[-1]
+        lead = leaf.ndim
+        if key in ("k", "v", "xk", "xv"):
+            logical = _kv_logical(cfg, policy, leaf.ndim - 4)
+        elif key == "conv":
+            logical = ("stack",) * (leaf.ndim - 3) + ("batch", None, "ssm_conv")
+        elif key == "ssm":
+            logical = ("stack",) * (leaf.ndim - 4) + ("batch", "ssm_heads", None, None)
+        else:
+            logical = (None,) * leaf.ndim
+        return policy.act_spec(leaf.shape, logical)
+    return jax.tree_util.tree_map_with_path(spec_for, cache_tree)
+
+
+# ---------------------------------------------------------------------------
+# steps
+# ---------------------------------------------------------------------------
+
+def make_constrain(cfg, policy: ShardingPolicy | None, grad_cast=False):
+    if policy is None and not grad_cast:
+        return None
+    sh = None
+    if policy is not None:
+        spec = policy.act_spec((0, 0, 0), ("batch", "seq", "act_embed"))
+        sh = NamedSharding(policy.mesh, spec)
+
+    def constrain(x):
+        if sh is not None:
+            x = jax.lax.with_sharding_constraint(x, sh)
+        if grad_cast:
+            x = zoo.grad_cast_bf16(x)
+        return x
+    return constrain
+
+
+def build_train_step(cfg: ModelConfig, hp: HParams, policy=None):
+    constrain = make_constrain(cfg, policy, grad_cast=hp.grad_cast)
+    constrain_out = (make_constrain(cfg, policy)
+                     if (hp.constrain_proj and policy is not None) else None)
+
+    def lf(p, b):
+        return zoo.loss_fn(cfg, p, b, remat=hp.remat,
+                           attn_impl=hp.attn_impl,
+                           vocab_chunk=hp.vocab_chunk,
+                           aux_coef=hp.aux_coef,
+                           constrain=constrain,
+                           constrain_out=constrain_out)
+
+    def train_step(state, batch):
+        # mixed precision: optionally cast the f32 master to bf16 ONCE per
+        # step (hoisted out of the microbatch scan); the cast's VJP is
+        # identity, so grads accumulate in f32 against the master
+        if hp.cast_once:
+            fwd_params = jax.tree.map(
+                lambda x: x.astype(jnp.bfloat16)
+                if x.dtype == jnp.float32 else x, state["params"])
+        else:
+            fwd_params = state["params"]
+
+        if hp.accum > 1:
+            a = hp.accum
+            mb = jax.tree.map(
+                lambda x: x.reshape(a, x.shape[0] // a, *x.shape[1:]), batch)
+
+            def body(gsum, microbatch):
+                loss, g = jax.value_and_grad(lf)(fwd_params, microbatch)
+                gsum = jax.tree.map(
+                    lambda s, x: s + x.astype(jnp.float32), gsum, g)
+                return gsum, loss
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state["params"])
+            grads, losses = jax.lax.scan(body, zeros, mb)
+            grads = jax.tree.map(lambda g: g / a, grads)
+            loss = losses.mean()
+        else:
+            loss, grads = jax.value_and_grad(lf)(fwd_params, batch)
+            if hp.cast_once:
+                grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        new_p, new_opt, gnorm = adam.adamw_update(
+            hp.optimizer, state["params"], grads, state["opt"], state["step"])
+        new_state = {"params": new_p, "opt": new_opt, "step": state["step"] + 1}
+        metrics = {"loss": loss, "grad_norm": gnorm,
+                   "lr": adam.lr_at(hp.optimizer, state["step"])}
+        return new_state, metrics
+
+    return train_step
+
+
+def build_prefill_step(cfg: ModelConfig, hp: HParams, policy=None):
+    constrain = make_constrain(cfg, policy)
+
+    def prefill_step(params, batch):
+        return zoo.prefill(cfg, params, batch, attn_impl=hp.attn_impl,
+                           constrain=constrain)
+    return prefill_step
+
+
+def build_serve_step(cfg: ModelConfig, hp: HParams, policy=None):
+    def serve_step(params, cache, tokens, pos):
+        return zoo.decode_step(cfg, params, cache, tokens, pos)
+    return serve_step
+
+
+def serving_params_struct(cfg: ModelConfig, hp: HParams):
+    """Serving uses low-precision params (dtype per hp.serve_dtype)."""
+    ap = abstract_params(zoo.model_template(cfg))
+    dt = jnp.dtype(hp.serve_dtype)
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dt if s.dtype == jnp.float32 else s.dtype),
+        ap)

@@ -1,0 +1,215 @@
+"""Flash attention with a STREAMING custom VJP.
+
+Plain `jax.grad` of blockwise attention saves every per-block probability
+tensor as scan residuals — the compiled HLO materializes the full [Sq, Sk]
+score matrix in f32 and the memory roofline term explodes (this is the
+baseline measured in EXPERIMENTS.md §Perf).  The fix is the INR-Arch
+insight applied to autodiff: never buffer what you can re-stream.  The
+backward pass recomputes scores block-by-block from (q, k, v, lse):
+
+  D_i  = rowsum(dO_i * O_i)
+  p_ij = exp(q_i k_j^T * sc - lse_i)            (recomputed, masked)
+  dv_j = sum_i p_ij^T dO_i
+  ds   = p_ij * (dO_i v_j^T - D_i) * sc
+  dq_i = sum_j ds k_j ;  dk_j = sum_i ds^T q_i
+
+Residuals are O(S·D) (q, k, v, out, lse) instead of O(S^2).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+NEG_INF = -1e30
+
+
+def _mask(q_pos, k_pos, window, sk):
+    m = (q_pos[:, None] >= k_pos[None, :]) & (k_pos < sk)[None, :]
+    win = jnp.asarray(window)
+    m &= ((q_pos[:, None] - k_pos[None, :]) < win) | (win <= 0)
+    return m
+
+
+def _pad_axis(x, axis, mult):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    w = [(0, 0)] * x.ndim
+    w[axis] = (0, pad)
+    return jnp.pad(x, w)
+
+
+def _fwd_impl(q, k, v, window, *, q_block, kv_block, q_offset):
+    """Blockwise forward returning (out, lse). Shapes: q [B,Sq,KH,G,D];
+    k, v [B,Sk,KH,D]."""
+    B, Sq, KH, G, D = q.shape
+    Sk = k.shape[1]
+    scale = 1.0 / math.sqrt(D)
+    qb, kb = min(q_block, Sq), min(kv_block, Sk)
+    qp = _pad_axis(q, 1, qb)
+    kp = _pad_axis(k, 1, kb)
+    vp = _pad_axis(v, 1, kb)
+    nq, nk = qp.shape[1] // qb, kp.shape[1] // kb
+    qs = qp.reshape(B, nq, qb, KH, G, D).transpose(1, 0, 2, 3, 4, 5)
+    ks = kp.reshape(B, nk, kb, KH, D).transpose(1, 0, 2, 3, 4)
+    vs = vp.reshape(B, nk, kb, KH, D).transpose(1, 0, 2, 3, 4)
+
+    def q_body(_, qin):
+        qi, iq = qin
+        q_pos = q_offset + iq * qb + jnp.arange(qb)
+
+        def kv_body(carry, kin):
+            m, l, acc = carry
+            kj, vj, jk = kin
+            k_pos = jk * kb + jnp.arange(kb)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qi, kj,
+                           preferred_element_type=jnp.float32) * scale
+            s = jnp.where(_mask(q_pos, k_pos, window, Sk)[None, None, None],
+                          s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p.astype(vj.dtype), vj,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc), None
+
+        init = (jnp.full((B, KH, G, qb), NEG_INF, jnp.float32),
+                jnp.zeros((B, KH, G, qb), jnp.float32),
+                jnp.zeros((B, KH, G, qb, D), jnp.float32))
+        (m, l, acc), _ = lax.scan(kv_body, init, (ks, vs, jnp.arange(nk)))
+        l = jnp.maximum(l, 1e-30)
+        out = (acc / l[..., None]).astype(qi.dtype)
+        lse = m + jnp.log(l)
+        return None, (out, lse)
+
+    _, (outs, lses) = lax.scan(q_body, None, (qs, jnp.arange(nq)))
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, nq * qb, KH, G, D)
+    lse = lses.transpose(1, 0, 4, 2, 3).reshape(B, nq * qb, KH, G)
+    return out[:, :Sq], lse[:, :Sq]
+
+
+def _bwd_impl(q, k, v, out, lse, do, window, *, q_block, kv_block, q_offset):
+    B, Sq, KH, G, D = q.shape
+    Sk = k.shape[1]
+    scale = 1.0 / math.sqrt(D)
+    qb, kb = min(q_block, Sq), min(kv_block, Sk)
+    Dl = jnp.einsum("bqhgd,bqhgd->bqhg", do.astype(jnp.float32),
+                    out.astype(jnp.float32))                  # rowsum(dO*O)
+
+    qp = _pad_axis(q, 1, qb)
+    dop = _pad_axis(do, 1, qb)
+    lsep = _pad_axis(lse, 1, qb)
+    # padded q rows: lse=0, do=0 -> p finite, contributions zero
+    Dp = _pad_axis(Dl, 1, qb)
+    kp = _pad_axis(k, 1, kb)
+    vp = _pad_axis(v, 1, kb)
+    nq, nk = qp.shape[1] // qb, kp.shape[1] // kb
+    qs = qp.reshape(B, nq, qb, KH, G, D).transpose(1, 0, 2, 3, 4, 5)
+    dos = dop.reshape(B, nq, qb, KH, G, D).transpose(1, 0, 2, 3, 4, 5)
+    lses = lsep.reshape(B, nq, qb, KH, G).transpose(1, 0, 2, 3, 4)
+    Ds = Dp.reshape(B, nq, qb, KH, G).transpose(1, 0, 2, 3, 4)
+    ks = kp.reshape(B, nk, kb, KH, D).transpose(1, 0, 2, 3, 4)
+    vs = vp.reshape(B, nk, kb, KH, D).transpose(1, 0, 2, 3, 4)
+
+    def p_block(qi, lse_i, iq, kj, jk):
+        q_pos = q_offset + iq * qb + jnp.arange(qb)
+        k_pos = jk * kb + jnp.arange(kb)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qi, kj,
+                       preferred_element_type=jnp.float32) * scale
+        s = jnp.where(_mask(q_pos, k_pos, window, Sk)[None, None, None],
+                      s, NEG_INF)
+        # lse already contains the running max; exp is safe
+        return jnp.exp(s - lse_i.transpose(0, 2, 3, 1)[..., None])
+
+    # pass 1: dq, streaming over kv blocks per q block
+    def dq_body(_, qin):
+        qi, doi, lsei, Di, iq = qin
+
+        def kv_body(dq, kin):
+            kj, vj, jk = kin
+            p = p_block(qi, lsei, iq, kj, jk)                   # [B,KH,G,qb,kb]
+            dp = jnp.einsum("bqhgd,bkhd->bhgqk", doi, vj,
+                            preferred_element_type=jnp.float32)
+            ds = p * (dp - Di.transpose(0, 2, 3, 1)[..., None]) * scale
+            dq = dq + jnp.einsum("bhgqk,bkhd->bqhgd", ds.astype(kj.dtype), kj,
+                                 preferred_element_type=jnp.float32)
+            return dq, None
+
+        dq0 = jnp.zeros((B, qb, KH, G, D), jnp.float32)
+        dq, _ = lax.scan(kv_body, dq0, (ks, vs, jnp.arange(nk)))
+        return None, dq
+
+    _, dqs = lax.scan(dq_body, None, (qs, dos, lses, Ds, jnp.arange(nq)))
+    dq = dqs.transpose(1, 0, 2, 3, 4, 5).reshape(B, nq * qb, KH, G, D)[:, :Sq]
+
+    # pass 2: dk, dv, streaming over q blocks per kv block
+    def dkv_body(_, kin):
+        kj, vj, jk = kin
+
+        def q_body(carry, qin):
+            dk, dv = carry
+            qi, doi, lsei, Di, iq = qin
+            p = p_block(qi, lsei, iq, kj, jk)
+            dv = dv + jnp.einsum("bhgqk,bqhgd->bkhd", p.astype(doi.dtype), doi,
+                                 preferred_element_type=jnp.float32)
+            dp = jnp.einsum("bqhgd,bkhd->bhgqk", doi, vj,
+                            preferred_element_type=jnp.float32)
+            ds = p * (dp - Di.transpose(0, 2, 3, 1)[..., None]) * scale
+            dk = dk + jnp.einsum("bhgqk,bqhgd->bkhd", ds.astype(qi.dtype), qi,
+                                 preferred_element_type=jnp.float32)
+            return (dk, dv), None
+
+        init = (jnp.zeros((B, kb, KH, D), jnp.float32),
+                jnp.zeros((B, kb, KH, D), jnp.float32))
+        (dk, dv), _ = lax.scan(q_body, init, (qs, dos, lses, Ds, jnp.arange(nq)))
+        return None, (dk, dv)
+
+    _, (dks, dvs) = lax.scan(dkv_body, None, (ks, vs, jnp.arange(nk)))
+    dk = dks.transpose(1, 0, 2, 3, 4).reshape(B, nk * kb, KH, D)[:, :Sk]
+    dv = dvs.transpose(1, 0, 2, 3, 4).reshape(B, nk * kb, KH, D)[:, :Sk]
+    return dq, dk, dv
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
+def _flash_core(q5, k, v, window, q_block, kv_block, q_offset):
+    out, _ = _fwd_impl(q5, k, v, window, q_block=q_block, kv_block=kv_block,
+                       q_offset=q_offset)
+    return out
+
+
+def _flash_core_fwd(q5, k, v, window, q_block, kv_block, q_offset):
+    out, lse = _fwd_impl(q5, k, v, window, q_block=q_block,
+                         kv_block=kv_block, q_offset=q_offset)
+    return out, (q5, k, v, out, lse, window)
+
+
+def _flash_core_bwd(q_block, kv_block, q_offset, res, do):
+    q5, k, v, out, lse, window = res
+    dq, dk, dv = _bwd_impl(q5, k, v, out, lse, do, window, q_block=q_block,
+                           kv_block=kv_block, q_offset=q_offset)
+    return (dq.astype(q5.dtype), dk.astype(k.dtype), dv.astype(v.dtype), None)
+
+
+_flash_core.defvjp(_flash_core_fwd, _flash_core_bwd)
+
+
+def flash_attention_cvjp(q, k, v, *, causal=True, window=0, q_offset=None,
+                         q_block=512, kv_block=1024):
+    """Drop-in replacement for layers.flash_attention with the streaming
+    backward.  q: [B, Sq, H, D]; k, v: [B, Sk, KH, D]."""
+    assert causal, "streaming backward currently assumes causal masking"
+    B, Sq, H, D = q.shape
+    KH = k.shape[2]
+    G = H // KH
+    if q_offset is None:
+        q_offset = k.shape[1] - Sq
+    q5 = q.reshape(B, Sq, KH, G, D)
+    out = _flash_core(q5, k, v, window, q_block, kv_block, q_offset)
+    return out.reshape(B, Sq, H, D)

@@ -1,0 +1,453 @@
+"""Model-zoo building blocks, pure-functional JAX.
+
+Everything here takes explicit param dicts (see models/zoo.py templates) and
+is written to lower cleanly under GSPMD for very long sequences:
+
+* attention is blockwise ("flash-style") with running max/sum so prefill_32k
+  never materializes an [S, S] score tensor;
+* MoE uses grouped dispatch/combine einsums (the GSPMD-canonical form that
+  produces all-to-all style collectives under expert parallelism);
+* Mamba2 uses the chunked SSD algorithm (intra-chunk quadratic + inter-chunk
+  scan), with an O(1)-state single-step path for decode.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# norms / rope / mlp
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, w, eps=1e-5):
+    """RMSNorm with f32 statistics but WITHOUT materializing an f32 copy of
+    x (the fused-kernel semantic): only the [..., 1] moments are f32.  A full
+    x.astype(f32) would double the activation traffic on the memory roofline
+    AND drag TP all-reduces up to f32 (measured in EXPERIMENTS.md §Perf)."""
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True, dtype=jnp.float32)
+    inv = lax.rsqrt(var + eps)
+    return (x * inv.astype(x.dtype)) * (1.0 + w).astype(x.dtype)
+
+
+def rope(x, positions, theta):
+    """x: [..., S, H, D] (or D broadcastable), positions: [..., S].
+
+    The angle table is built in f32 but the rotation runs in x.dtype: mixing
+    f32 cos/sin into a bf16 multiply would PROMOTE the whole backward
+    cotangent chain to f32 (2x AR and activation traffic — see §Perf)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq          # [..., S, half]
+    ang = ang[..., None, :]                                        # [..., S, 1, half]
+    cos = jnp.cos(ang).astype(x.dtype)
+    sin = jnp.sin(ang).astype(x.dtype)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def _act(name):
+    return {"swiglu": jax.nn.silu, "geglu": jax.nn.gelu, "gelu": jax.nn.gelu}[name]
+
+
+def mlp(p, x, mlp_type="swiglu", cdt=jnp.bfloat16):
+    act = _act(mlp_type)
+    if mlp_type in ("swiglu", "geglu"):
+        h = act(x @ p["wg"].astype(cdt)) * (x @ p["wi"].astype(cdt))
+    else:
+        h = act(x @ p["wi"].astype(cdt))
+    return h @ p["wo"].astype(cdt)
+
+
+# ---------------------------------------------------------------------------
+# blockwise (flash-style) attention, pure JAX
+# ---------------------------------------------------------------------------
+
+def _pad_to(x, axis, mult):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x, n
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), n
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, q_offset=None,
+                    q_block=512, kv_block=1024):
+    """Blockwise attention with running softmax.
+
+    q: [B, Sq, H, D]; k, v: [B, Sk, KH, D] with H = KH * G (GQA).
+    window > 0 restricts to a local band (sliding-window attention).
+    q_offset: starting absolute position of q (for prefill continuation);
+    defaults to Sk - Sq (standard causal alignment).
+    """
+    B, Sq, H, D = q.shape
+    _, Sk, KH, _ = k.shape
+    G = H // KH
+    if q_offset is None:
+        q_offset = Sk - Sq
+    scale = 1.0 / math.sqrt(D)
+
+    q_block = min(q_block, Sq)
+    kv_block = min(kv_block, Sk)
+    q, _ = _pad_to(q, 1, q_block)
+    k, _ = _pad_to(k, 1, kv_block)
+    v, _ = _pad_to(v, 1, kv_block)
+    nq, nk = q.shape[1] // q_block, k.shape[1] // kv_block
+
+    qs = q.reshape(B, nq, q_block, KH, G, D).transpose(1, 0, 2, 3, 4, 5)
+    ks = k.reshape(B, nk, kv_block, KH, D).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(B, nk, kv_block, KH, D).transpose(1, 0, 2, 3, 4)
+
+    def q_body(_, q_in):
+        qi, q_idx = q_in                                  # [B, Q, KH, G, D]
+        q_pos = q_offset + q_idx * q_block + jnp.arange(q_block)
+
+        def kv_body(carry, kv_in):
+            m, l, acc = carry
+            kj, vj, k_idx = kv_in                          # [B, K, KH, D]
+            k_pos = k_idx * kv_block + jnp.arange(kv_block)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qi, kj,
+                           preferred_element_type=jnp.float32) * scale
+            mask = jnp.ones((q_block, kv_block), bool)
+            if causal:
+                mask &= q_pos[:, None] >= k_pos[None, :]
+            if window is not None:
+                # `window` may be a traced per-layer scalar (scan xs); 0 = global
+                win = jnp.asarray(window)
+                band = (q_pos[:, None] - k_pos[None, :]) < win
+                mask &= band | (win <= 0)
+            # padded keys beyond Sk
+            mask &= (k_pos < Sk)[None, :]
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p.astype(vj.dtype), vj,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        init = (jnp.full((B, KH, G, q_block), NEG_INF, jnp.float32),
+                jnp.zeros((B, KH, G, q_block), jnp.float32),
+                jnp.zeros((B, KH, G, q_block, D), jnp.float32))
+        (m, l, acc), _ = lax.scan(kv_body, init, (ks, vs, jnp.arange(nk)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.astype(qi.dtype)                  # [B, KH, G, Q, D]
+
+    _, outs = lax.scan(q_body, None, (qs, jnp.arange(nq)))
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, nq * q_block, H, D)
+    return out[:, :Sq]
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, window=0):
+    """Single-token attention against a cache.
+
+    q: [B, 1, H, D]; caches: [B, Smax, KH, D]; pos: scalar current position.
+    """
+    B, _, H, D = q.shape
+    _, Smax, KH, _ = k_cache.shape
+    G = H // KH
+    qi = q.reshape(B, KH, G, D)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qi, k_cache,
+                   preferred_element_type=jnp.float32) / math.sqrt(D)
+    k_pos = jnp.arange(Smax)
+    mask = k_pos <= pos
+    if window is not None:
+        win = jnp.asarray(window)
+        mask &= ((pos - k_pos) < win) | (win <= 0)
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention layer (shared by train / prefill / decode)
+# ---------------------------------------------------------------------------
+
+def _qkv(cfg, p, x, positions, cdt, *, rope_on=True):
+    B = x.shape[0]
+    q = (x @ p["q"].astype(cdt)).reshape(B, -1, cfg.n_heads, cfg.head_dim)
+    k = (x @ p["k"].astype(cdt)).reshape(B, -1, cfg.n_kv_heads, cfg.head_dim)
+    v = (x @ p["v"].astype(cdt)).reshape(B, -1, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["qn"], cfg.norm_eps)
+        k = rms_norm(k, p["kn"], cfg.norm_eps)
+    if rope_on:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_forward(cfg, p, x, positions, *, window=0, attn_impl="flash"):
+    """Full-sequence self attention. x: [B, S, D]."""
+    cdt = x.dtype
+    q, k, v = _qkv(cfg, p, x, positions, cdt)
+    if attn_impl == "pallas":
+        from repro.kernels import ops as kops
+        out = kops.flash_attention(q, k, v, causal=True, window=window)
+    elif attn_impl == "flash_cvjp":
+        from repro.models.flash_cvjp import flash_attention_cvjp
+        out = flash_attention_cvjp(q, k, v, causal=True, window=window)
+    else:
+        out = flash_attention(q, k, v, causal=True, window=window)
+    B, S = x.shape[:2]
+    out = out.reshape(B, S, cfg.q_dim)
+    return out @ p["o"].astype(cdt), k, v
+
+
+def attn_decode(cfg, p, x, cache_k, cache_v, pos, *, window=0):
+    """x: [B, 1, D]; caches [B, Smax, KH, hd]; returns (out, new_k, new_v)."""
+    cdt = x.dtype
+    q, k, v = _qkv(cfg, p, x, jnp.array([pos])[None, :], cdt)
+    cache_k = lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype), pos, 1)
+    cache_v = lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype), pos, 1)
+    out = decode_attention(q, cache_k, cache_v, pos, window=window)
+    B = x.shape[0]
+    out = out.reshape(B, 1, cfg.q_dim)
+    return out @ p["o"].astype(cdt), cache_k, cache_v
+
+
+def cross_attn_forward(cfg, p, x, kv_src, *, attn_impl="flash"):
+    """Cross attention to precomputed patch embeddings. kv_src: [B, T, D]."""
+    cdt = x.dtype
+    B, S = x.shape[:2]
+    T = kv_src.shape[1]
+    q = (x @ p["q"].astype(cdt)).reshape(B, S, cfg.n_heads, cfg.head_dim)
+    k = (kv_src @ p["k"].astype(cdt)).reshape(B, T, cfg.n_kv_heads, cfg.head_dim)
+    v = (kv_src @ p["v"].astype(cdt)).reshape(B, T, cfg.n_kv_heads, cfg.head_dim)
+    out = flash_attention(q, k, v, causal=False, q_offset=0)
+    out = out.reshape(B, S, cfg.q_dim)
+    return out @ p["o"].astype(cdt), k, v
+
+
+def cross_attn_decode(cfg, p, x, k, v):
+    cdt = x.dtype
+    B = x.shape[0]
+    q = (x @ p["q"].astype(cdt)).reshape(B, 1, cfg.n_heads, cfg.head_dim)
+    T = k.shape[1]
+    out = decode_attention(q, k, v, T - 1)                 # full visibility
+    out = out.reshape(B, 1, cfg.q_dim)
+    return out @ p["o"].astype(cdt)
+
+
+# ---------------------------------------------------------------------------
+# mixture of experts
+# ---------------------------------------------------------------------------
+
+def moe_ffn(cfg, p, x, *, capacity_factor=1.25, group_tokens=4096):
+    """Dropping MoE with grouped dispatch/combine einsums.
+
+    x: [B, S, D] -> [B, S, D].  Returns (out, aux_loss).
+    """
+    B, S, D = x.shape
+    cdt = x.dtype
+    E, K = cfg.n_experts, cfg.top_k
+    T = B * S
+    xt = x.reshape(T, D)
+
+    logits = (xt @ p["router"].astype(jnp.float32)).astype(jnp.float32)
+    gates = jax.nn.softmax(logits, axis=-1)                 # [T, E]
+    top_g, top_i = lax.top_k(gates, K)                      # [T, K]
+    top_g = top_g / jnp.maximum(top_g.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (switch-style)
+    density = jnp.mean(jax.nn.one_hot(top_i[:, 0], E), axis=0)
+    aux = E * jnp.sum(density * jnp.mean(gates, axis=0))
+
+    # group tokens so the dispatch one-hots stay small
+    g_tok = min(group_tokens, T)
+    n_groups = max(T // g_tok, 1)
+    Tg = T // n_groups
+    C = max(int(math.ceil(Tg * K / E * capacity_factor)), K)
+    C = min(C, Tg)
+
+    sel = jax.nn.one_hot(top_i, E, dtype=jnp.int32)         # [T, K, E]
+    sel = sel.reshape(n_groups, Tg, K, E)
+    # position of each (token, slot) within its expert queue, per group
+    pos_in_expert = (jnp.cumsum(sel.reshape(n_groups, Tg * K, E), axis=1)
+                     .reshape(n_groups, Tg, K, E) - sel)    # [G, Tg, K, E]
+    keep = (pos_in_expert < C) & (sel > 0)
+    pos_oh = jax.nn.one_hot(pos_in_expert, C, dtype=cdt)    # [G, Tg, K, E, C]
+    disp = jnp.where(keep[..., None], pos_oh, 0).astype(cdt)
+    comb = disp * top_g.reshape(n_groups, Tg, K, 1, 1).astype(cdt)
+    disp = disp.sum(2)                                      # [G, Tg, E, C]
+    comb = comb.sum(2)
+
+    xg = xt.reshape(n_groups, Tg, D)
+    ein = partial(jnp.einsum, preferred_element_type=cdt)
+    xe = ein("gtec,gtd->gecd", disp, xg)                    # -> expert-major
+    act = _act(cfg.mlp_type)
+    wi, wg, wo = (p["wi"].astype(cdt), p["wg"].astype(cdt), p["wo"].astype(cdt))
+    h = act(ein("gecd,edf->gecf", xe, wg)) * ein("gecd,edf->gecf", xe, wi)
+    ye = ein("gecf,efd->gecd", h, wo)
+    out = ein("gtec,gecd->gtd", comb, ye).reshape(B, S, D)
+
+    if cfg.n_shared_experts:
+        out = out + mlp(p["shared"], x, cfg.mlp_type, cdt)
+    return out, aux
+
+
+# ---------------------------------------------------------------------------
+# mamba2 (SSD)
+# ---------------------------------------------------------------------------
+
+def _segsum(a):
+    """a: [..., q] -> [..., q, q] with out[i,j] = sum_{k=j+1..i} a_k (i>=j)."""
+    q = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)
+    seg = cum[..., :, None] - cum[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, seg, NEG_INF)
+
+
+def ssd_chunked(xh, dt, a_log, Bm, Cm, chunk):
+    """Chunked state-space-duality scan (mamba2).
+
+    xh: [b, s, h, p]; dt: [b, s, h]; a_log: [h]; Bm, Cm: [b, s, n].
+    State recurrence / decays in f32; the large intra-chunk einsums run in
+    the input dtype (bf16 in training) — keeping them f32 doubles the
+    mamba-layer traffic on the memory roofline (EXPERIMENTS.md §Perf,
+    jamba iteration log).
+    """
+    b, s, h, pdim = xh.shape
+    n = Bm.shape[-1]
+    cdt = xh.dtype
+    pad = (-s) % chunk
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    nc = xh.shape[1] // chunk
+    q = chunk
+
+    xh = xh.reshape(b, nc, q, h, pdim)
+    dt = dt.reshape(b, nc, q, h).astype(jnp.float32)
+    Bm = Bm.reshape(b, nc, q, n)
+    Cm = Cm.reshape(b, nc, q, n)
+
+    a = -jnp.exp(a_log.astype(jnp.float32))                 # [h] (negative)
+    da = dt * a[None, None, None, :]                        # [b,nc,q,h] f32
+    xdt = (xh.astype(jnp.float32) * dt[..., None]).astype(cdt)
+
+    # intra-chunk (quadratic within chunk); decays computed f32, cast for
+    # the big einsums
+    L = jnp.exp(_segsum(da.transpose(0, 3, 1, 2)))          # [b,h,nc,q,q]
+    y_diag = jnp.einsum("bcqn,bckn,bhcqk,bckhp->bcqhp", Cm, Bm,
+                        L.astype(cdt), xdt,
+                        preferred_element_type=jnp.float32)
+
+    # chunk-final states
+    cum = jnp.cumsum(da, axis=2)                            # [b,nc,q,h]
+    decay_states = jnp.exp(cum[:, :, -1:, :] - cum)         # [b,nc,q,h]
+    states = jnp.einsum("bcqn,bcqh,bcqhp->bchpn", Bm,
+                        decay_states.astype(cdt), xdt,
+                        preferred_element_type=jnp.float32)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                 # [b,nc,h]
+
+    def scan_body(s_prev, inp):
+        st, dec = inp                                       # [b,h,p,n], [b,h]
+        s_new = s_prev * dec[..., None, None] + st
+        return s_new, s_prev
+
+    init = jnp.zeros((b, h, pdim, n), jnp.float32)
+    _, prev_states = lax.scan(
+        scan_body, init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)      # [b,nc,h,p,n]
+
+    state_decay = jnp.exp(cum)                              # decay from chunk start
+    y_off = jnp.einsum("bcqn,bchpn,bcqh->bcqhp", Cm,
+                       prev_states.astype(cdt), state_decay.astype(cdt),
+                       preferred_element_type=jnp.float32)
+
+    y = (y_diag + y_off).reshape(b, nc * q, h, pdim)
+    return y[:, :s].astype(jnp.float32)
+
+
+def _causal_conv(x, w, cache=None):
+    """Depthwise causal conv.  x: [B, S, C]; w: [W, C]. cache: [B, W-1, C]."""
+    W = w.shape[0]
+    if cache is None:
+        pad = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    else:
+        pad = cache.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(W))
+    new_cache = xp[:, -(W - 1):, :] if W > 1 else None
+    return out, new_cache
+
+
+def mamba_layer(cfg, p, x, *, conv_cache=None, ssm_state=None, decode=False,
+                return_state=False):
+    """Mamba2 block.  x: [B, S, D].
+
+    Train: decode=False -> returns (y, (None, None)).
+    Prefill: decode=False, return_state=True -> (y, (conv_cache, state)).
+    Decode: S=1 with caches -> returns (y, (conv_cache', state')).
+    """
+    cdt = x.dtype
+    B, S, D = x.shape
+    di, n, nh, ph = cfg.ssm_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+
+    z = x @ p["wz"].astype(cdt)                             # [B,S,di]
+    xin = x @ p["wx"].astype(cdt)
+    Bm = x @ p["wb"].astype(cdt)                            # [B,S,n]
+    Cm = x @ p["wc"].astype(cdt)
+    dt_raw = x @ p["wdt"].astype(cdt)                       # [B,S,nh]
+
+    xbc = jnp.concatenate([xin, Bm, Cm], axis=-1)
+    xbc, new_conv = _causal_conv(xbc, p["conv"].astype(cdt), conv_cache)
+    xbc = jax.nn.silu(xbc)
+    xin, Bm, Cm = jnp.split(xbc, [di, di + n], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    xh = xin.reshape(B, S, nh, ph)
+
+    if not decode:
+        y = ssd_chunked(xh, dt, p["a_log"], Bm, Cm, cfg.ssm_chunk)
+        # final state only needed for prefill -> decode handoff
+        new_state = (_ssd_final_state(xh, dt, p["a_log"], Bm)
+                     if return_state else None)
+    else:
+        a = -jnp.exp(p["a_log"].astype(jnp.float32))        # [nh]
+        da = jnp.exp(dt[:, 0] * a[None, :])                 # [B,nh]
+        upd = jnp.einsum("bh,bhp,bn->bhpn", dt[:, 0],
+                         xh[:, 0].astype(jnp.float32), Bm[:, 0].astype(jnp.float32))
+        new_state = ssm_state * da[..., None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", new_state,
+                       Cm[:, 0].astype(jnp.float32))[:, None]
+
+    y = y + xh.astype(jnp.float32) * p["d"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(B, S, di).astype(cdt)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = y @ p["wo"].astype(cdt)
+    return out, (new_conv, new_state)
+
+
+def _ssd_final_state(xh, dt, a_log, Bm):
+    """Final SSM state after a full sequence (for prefill -> decode handoff)."""
+    b, s, h, pdim = xh.shape
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    da = dt.astype(jnp.float32) * a[None, None, :]          # [b,s,h]
+    cum = jnp.cumsum(da, axis=1)
+    decay = jnp.exp(cum[:, -1:, :] - cum)                   # [b,s,h]
+    return jnp.einsum("bsn,bsh,bshp->bhpn", Bm.astype(jnp.float32),
+                      decay * dt.astype(jnp.float32), xh.astype(jnp.float32))

@@ -1,0 +1,71 @@
+"""Parameter templates: one declarative tree drives init, abstract lowering,
+and sharding.
+
+A model is described as a pytree of `ParamSpec(shape, logical, init)`.  From
+the same template we derive:
+  * real initialized params   (`init_params`)          - smoke tests/examples
+  * ShapeDtypeStruct params   (`abstract_params`)      - dry-run lowering
+  * PartitionSpec tree        (`sharding.tree_specs`)  - pjit in/out shardings
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    logical: tuple[str | None, ...]     # logical axis name per dim
+    init: str = "normal"                # normal | zeros | ones | scaled | ssm_a | arange
+    scale: float = 1.0
+    dtype: str = "float32"
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _init_leaf(spec: ParamSpec, key) -> jax.Array:
+    dtype = jnp.dtype(spec.dtype)
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    if spec.init == "ssm_a":
+        # A_log init: log of uniform [1, 16) as in mamba2
+        u = jax.random.uniform(key, spec.shape, jnp.float32, 1.0, 16.0)
+        return jnp.log(u).astype(dtype)
+    if spec.init == "normal":
+        fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+        std = spec.scale / math.sqrt(max(fan_in, 1))
+        return (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(dtype)
+    if spec.init == "scaled":
+        return (jax.random.normal(key, spec.shape, jnp.float32) * spec.scale).astype(dtype)
+    raise ValueError(spec.init)
+
+
+def init_params(template, key) -> dict:
+    leaves, treedef = jax.tree.flatten(template, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(treedef, [_init_leaf(s, k) for s, k in zip(leaves, keys)])
+
+
+def abstract_params(template):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.dtype(s.dtype)),
+        template, is_leaf=is_spec)
+
+
+def count_template_params(template) -> int:
+    return sum(math.prod(s.shape) for s in
+               jax.tree.leaves(template, is_leaf=is_spec))

@@ -1,0 +1,647 @@
+"""The architecture zoo: one template + forward/loss/prefill/decode family
+covering all 10 assigned architectures.
+
+Layer stacks are built for `lax.scan` (compile-once-per-layer-type):
+  * uniform archs (dense / all-MoE / pure-SSM / audio): single scan over
+    n_layers, with per-layer scalars (e.g. gemma's local:global window) fed
+    through the scan as xs;
+  * vlm (llama-3.2-vision): scan over periods of [4 self-attn + 1 cross-attn];
+  * hybrid (jamba): scan over superblocks of [mamba/attn x dense/MoE] laid out
+    by the 1:7 interleave with MoE on alternating layers.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import layers as L
+from repro.models.template import ParamSpec, abstract_params, init_params
+
+NORM = lambda d: ParamSpec((d,), ("tiny",), init="zeros")
+
+
+@jax.custom_vjp
+def grad_cast_bf16(x):
+    """Identity with a bf16 cotangent barrier: stops f32 dtype drift in the
+    backward residual chain (mixed-precision cotangent casting)."""
+    return x
+
+
+def _gc_fwd(x):
+    return x, None
+
+
+def _gc_bwd(_, g):
+    return (g.astype(jnp.bfloat16),)
+
+
+grad_cast_bf16.defvjp(_gc_fwd, _gc_bwd)
+
+
+# ---------------------------------------------------------------------------
+# templates
+# ---------------------------------------------------------------------------
+
+def stack_tree(tree, n):
+    return jax.tree.map(
+        lambda s: ParamSpec((n, *s.shape), ("stack", *s.logical), s.init, s.scale, s.dtype),
+        tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def attn_template(cfg: ModelConfig) -> dict:
+    D = cfg.d_model
+    t = {
+        "q": ParamSpec((D, cfg.q_dim), ("attn_fsdp", "q_dim")),
+        "k": ParamSpec((D, cfg.kv_dim), ("attn_fsdp", "kv_dim")),
+        "v": ParamSpec((D, cfg.kv_dim), ("attn_fsdp", "kv_dim")),
+        "o": ParamSpec((cfg.q_dim, D), ("o_in", "attn_fsdp")),
+    }
+    if cfg.qk_norm:
+        t["qn"] = NORM(cfg.head_dim)
+        t["kn"] = NORM(cfg.head_dim)
+    return t
+
+
+def mlp_template(cfg: ModelConfig, hidden: int) -> dict:
+    D = cfg.d_model
+    t = {"wi": ParamSpec((D, hidden), ("mlp_fsdp", "ff")),
+         "wo": ParamSpec((hidden, D), ("ff", "mlp_fsdp"))}
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        t["wg"] = ParamSpec((D, hidden), ("mlp_fsdp", "ff"))
+    return t
+
+
+def moe_template(cfg: ModelConfig) -> dict:
+    assert cfg.mlp_type in ("swiglu", "geglu"), "MoE experts are gated"
+    D, E, F = cfg.d_model, cfg.n_experts, cfg.d_expert
+    t = {
+        "router": ParamSpec((D, E), ("mlp_fsdp", "tiny")),
+        "wi": ParamSpec((E, D, F), ("experts", "expert_fsdp", "expert_ff")),
+        "wg": ParamSpec((E, D, F), ("experts", "expert_fsdp", "expert_ff")),
+        "wo": ParamSpec((E, F, D), ("experts", "expert_ff", "expert_fsdp")),
+    }
+    if cfg.n_shared_experts:
+        t["shared"] = mlp_template(cfg, cfg.n_shared_experts * cfg.d_expert)
+    return t
+
+
+def mamba_template(cfg: ModelConfig) -> dict:
+    D, di, n, nh = cfg.d_model, cfg.ssm_inner, cfg.ssm_state, cfg.ssm_heads
+    return {
+        "wz": ParamSpec((D, di), ("ssm_fsdp", "ssm_inner")),
+        "wx": ParamSpec((D, di), ("ssm_fsdp", "ssm_inner")),
+        "wb": ParamSpec((D, n), ("ssm_fsdp", "ssm_state")),
+        "wc": ParamSpec((D, n), ("ssm_fsdp", "ssm_state")),
+        "wdt": ParamSpec((D, nh), ("ssm_fsdp", "ssm_heads")),
+        "conv": ParamSpec((4, di + 2 * n), ("conv_w", "ssm_inner"), init="scaled", scale=0.5),
+        "a_log": ParamSpec((nh,), ("tiny",), init="ssm_a"),
+        "d": ParamSpec((nh,), ("tiny",), init="ones"),
+        "dt_bias": ParamSpec((nh,), ("tiny",), init="zeros"),
+        "norm": NORM(di),
+        "wo": ParamSpec((di, D), ("ssm_inner", "ssm_fsdp")),
+    }
+
+
+def _uniform_layer_template(cfg: ModelConfig) -> dict:
+    """One layer of a uniform-stack arch."""
+    D = cfg.d_model
+    if cfg.family == "ssm":
+        return {"ln": NORM(D), "mamba": mamba_template(cfg)}
+    t = {"ln1": NORM(D), "attn": attn_template(cfg), "ln2": NORM(D)}
+    if cfg.n_experts and cfg.moe_every == 1:
+        t["moe"] = moe_template(cfg)
+    else:
+        t["mlp"] = mlp_template(cfg, cfg.d_ff)
+    return t
+
+
+# jamba superblock: index within the 8-layer period -> (mixer, ffn, slot)
+def _hybrid_period(cfg: ModelConfig):
+    period = []
+    counts = {"mamba_dense": 0, "mamba_moe": 0, "attn_dense": 0, "attn_moe": 0}
+    for j in range(cfg.attn_period):
+        mixer = "attn" if cfg.is_attn_layer(j) else "mamba"
+        ffn = "moe" if cfg.is_moe_layer(j) else "dense"
+        key = f"{mixer}_{ffn}"
+        period.append((mixer, ffn, key, counts[key]))
+        counts[key] += 1
+    return period, counts
+
+
+def _hybrid_block_template(cfg: ModelConfig) -> dict:
+    D = cfg.d_model
+    period, counts = _hybrid_period(cfg)
+    mixer_unit = {"ln1": NORM(D)}
+    t = {}
+    for key, cnt in counts.items():
+        if cnt == 0:
+            continue
+        mixer, ffn = key.split("_")
+        unit = {"ln1": NORM(D), "ln2": NORM(D)}
+        unit["mamba" if mixer == "mamba" else "attn"] = (
+            mamba_template(cfg) if mixer == "mamba" else attn_template(cfg))
+        unit["moe" if ffn == "moe" else "mlp"] = (
+            moe_template(cfg) if ffn == "moe" else mlp_template(cfg, cfg.d_ff))
+        t[key] = stack_tree(unit, cnt) if cnt > 1 else unit
+    return t
+
+
+def _vlm_period_template(cfg: ModelConfig) -> dict:
+    n_self = cfg.cross_attn_period - 1
+    self_layer = {"ln1": NORM(cfg.d_model), "attn": attn_template(cfg),
+                  "ln2": NORM(cfg.d_model), "mlp": mlp_template(cfg, cfg.d_ff)}
+    cross_layer = {"lnx": NORM(cfg.d_model), "xattn": attn_template(cfg),
+                   "ln2": NORM(cfg.d_model), "mlp": mlp_template(cfg, cfg.d_ff),
+                   "gate": ParamSpec((1,), ("tiny",), init="zeros")}
+    return {"self": stack_tree(self_layer, n_self), "cross": cross_layer}
+
+
+def model_template(cfg: ModelConfig) -> dict:
+    D, V = cfg.d_model, cfg.vocab_size
+    t = {
+        "embed": ParamSpec((V, D), ("vocab", "embed"), init="scaled", scale=0.02),
+        "lm_head": ParamSpec((D, V), ("embed", "vocab")),
+        "final_norm": NORM(D),
+    }
+    if cfg.family == "vlm":
+        n_periods = cfg.n_layers // cfg.cross_attn_period
+        t["periods"] = stack_tree(_vlm_period_template(cfg), n_periods)
+    elif cfg.family == "hybrid":
+        n_blocks = cfg.n_layers // cfg.attn_period
+        t["blocks"] = stack_tree(_hybrid_block_template(cfg), n_blocks)
+    else:
+        t["layers"] = stack_tree(_uniform_layer_template(cfg), cfg.n_layers)
+    return t
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+def _remat(fn, policy: str):
+    if policy == "none":
+        return fn
+    pol = {
+        "dots": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+        "full": jax.checkpoint_policies.nothing_saveable,
+    }[policy]
+    return jax.checkpoint(fn, policy=pol)
+
+
+def _layer_windows(cfg: ModelConfig) -> jnp.ndarray:
+    """Per-layer attention window (0 = global), as scan xs."""
+    return jnp.array(
+        [0 if cfg.is_global_attn_layer(i) else cfg.sliding_window
+         for i in range(cfg.n_layers)], dtype=jnp.int32)
+
+
+def _attn_block(cfg, p, x, positions, window, attn_impl, cons_out=None):
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    a, _, _ = L.attn_forward(cfg, p["attn"], h, positions, window=window,
+                             attn_impl=attn_impl)
+    if cons_out is not None:
+        a = cons_out(a)          # resolve TP partial-sums while still bf16
+    return x + a
+
+
+def _ffn_block(cfg, p, x, cons_out=None):
+    h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    if "moe" in p:
+        f, aux = L.moe_ffn(cfg, p["moe"], h)
+    else:
+        f, aux = L.mlp(p["mlp"], h, cfg.mlp_type, x.dtype), 0.0
+    if cons_out is not None:
+        f = cons_out(f)
+    return x + f, aux
+
+
+def _mamba_block(cfg, p, x):
+    h = L.rms_norm(x, p["ln1" if "ln1" in p else "ln"], cfg.norm_eps)
+    y, _ = L.mamba_layer(cfg, p["mamba"], h)
+    return x + y
+
+
+def forward(cfg: ModelConfig, params, batch, *, remat="dots", attn_impl="flash",
+            constrain=None, constrain_out=None):
+    """Training/scoring forward pass -> logits [B, S, V] (compute dtype)."""
+    cons = constrain if constrain is not None else (lambda a: a)
+    cons_out = constrain_out
+    cdt = jnp.dtype(cfg.compute_dtype)
+    if cfg.embed_input:
+        x = batch["embeds"].astype(cdt)
+        B, S = x.shape[:2]
+    else:
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = jnp.take(params["embed"].astype(cdt), tokens, axis=0)
+    positions = jnp.arange(S)[None, :]
+    image = batch.get("image_embeds")
+    if image is not None:
+        image = image.astype(cdt)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    if cfg.family == "vlm":
+        n_self = cfg.cross_attn_period - 1
+
+        def period_fn(x, pp):
+            aux = jnp.zeros((), jnp.float32)
+
+            def self_fn(x, lp):
+                x = cons(x)
+                x = _attn_block(cfg, lp, x, positions, 0, attn_impl, cons_out)
+                x, a = _ffn_block(cfg, lp, x, cons_out)
+                return x, a
+            x, auxs = lax.scan(_remat(self_fn, remat), x, pp["self"])
+            cp = pp["cross"]
+            h = L.rms_norm(x, cp["lnx"], cfg.norm_eps)
+            a, _, _ = L.cross_attn_forward(cfg, cp["xattn"], h, image)
+            x = x + jnp.tanh(cp["gate"].astype(cdt)) * a
+            x, a2 = _ffn_block(cfg, cp, x)
+            return x, auxs.sum() + a2
+
+        x, auxs = lax.scan(period_fn, x, params["periods"])
+        aux_total = auxs.sum()
+
+    elif cfg.family == "hybrid":
+        period, _ = _hybrid_period(cfg)
+
+        def block_fn(x, bp):
+            aux = jnp.zeros((), jnp.float32)
+            x = cons(x)
+            for mixer, ffn, key, slot in period:
+                unit = bp[key]
+                cnt = sum(1 for m, f, k, s in period if k == key)
+                lp = jax.tree.map(lambda a: a[slot], unit) if cnt > 1 else unit
+                if mixer == "attn":
+                    x = _attn_block(cfg, lp, x, positions, 0, attn_impl,
+                                    cons_out)
+                else:
+                    x = _mamba_block(cfg, lp, x)
+                x, a = _ffn_block(cfg, lp, x, cons_out)
+                aux = aux + a
+            return x, aux
+
+        x, auxs = lax.scan(_remat(block_fn, remat), x, params["blocks"])
+        aux_total = auxs.sum()
+
+    elif cfg.family == "ssm":
+        def layer_fn(x, lp):
+            return _mamba_block(cfg, lp, cons(x)), 0.0
+        x, _ = lax.scan(_remat(layer_fn, remat), x, params["layers"])
+
+    else:
+        windows = _layer_windows(cfg)
+
+        def layer_fn(x, xs):
+            lp, window = xs
+            x = cons(x)
+            x = _attn_block(cfg, lp, x, positions, window, attn_impl,
+                            cons_out)
+            x, a = _ffn_block(cfg, lp, x, cons_out)
+            return x, a
+        x, auxs = lax.scan(_remat(layer_fn, remat), x, (params["layers"], windows))
+        aux_total = auxs.sum()
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["lm_head"].astype(cdt)
+    return logits, aux_total
+
+
+def ce_loss(logits, labels, vocab_chunk=0):
+    """Cross entropy in f32; optional vocab chunking to bound live memory."""
+    if vocab_chunk and logits.shape[-1] > vocab_chunk:
+        V = logits.shape[-1]
+        nc = math.ceil(V / vocab_chunk)
+        pad = nc * vocab_chunk - V
+        lp = jnp.pad(logits, ((0, 0), (0, 0), (0, pad)),
+                     constant_values=L.NEG_INF)
+        chunks = lp.reshape(*lp.shape[:-1], nc, vocab_chunk)
+
+        def body(carry, c):
+            m, s = carry
+            cm = c.max(-1).astype(jnp.float32)
+            m_new = jnp.maximum(m, cm)
+            s = s * jnp.exp(m - m_new) + jnp.exp(
+                c.astype(jnp.float32) - m_new[..., None]).sum(-1)
+            return (m_new, s), None
+
+        init = (jnp.full(logits.shape[:-1], L.NEG_INF, jnp.float32),
+                jnp.zeros(logits.shape[:-1], jnp.float32))
+        (m, s), _ = lax.scan(body, init, chunks.transpose(2, 0, 1, 3))
+        lse = m + jnp.log(s)
+    else:
+        lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    lab = jnp.take_along_axis(
+        logits, labels[..., None], axis=-1)[..., 0].astype(jnp.float32)
+    return (lse - lab).mean()
+
+
+def loss_fn(cfg, params, batch, *, remat="dots", attn_impl="flash",
+            vocab_chunk=0, aux_coef=0.01, constrain=None, constrain_out=None):
+    logits, aux = forward(cfg, params, batch, remat=remat, attn_impl=attn_impl,
+                          constrain=constrain, constrain_out=constrain_out)
+    return ce_loss(logits, batch["labels"], vocab_chunk) + aux_coef * aux
+
+
+# ---------------------------------------------------------------------------
+# decode path (serve_step) + prefill
+# ---------------------------------------------------------------------------
+
+def _cache_layer_shapes(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    """Per-layer cache entry ShapeDtypeStructs (unstacked)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    out = {}
+    if cfg.family == "ssm" or cfg.family == "hybrid":
+        di, n = cfg.ssm_inner, cfg.ssm_state
+        out["conv"] = jax.ShapeDtypeStruct((batch, 3, di + 2 * n), cdt)
+        out["ssm"] = jax.ShapeDtypeStruct(
+            (batch, cfg.ssm_heads, cfg.ssm_head_dim, n), jnp.float32)
+    if cfg.family != "ssm":
+        out["k"] = jax.ShapeDtypeStruct(
+            (batch, seq, cfg.n_kv_heads, cfg.head_dim), cdt)
+        out["v"] = jax.ShapeDtypeStruct(
+            (batch, seq, cfg.n_kv_heads, cfg.head_dim), cdt)
+    return out
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq: int, abstract=False):
+    """Decode cache pytree (stacked over scan groups)."""
+    def mk(shape, dtype):
+        if abstract:
+            return jax.ShapeDtypeStruct(shape, dtype)
+        return jnp.zeros(shape, dtype)
+
+    cdt = jnp.dtype(cfg.compute_dtype)
+    kv = lambda n: {"k": mk((n, batch, seq, cfg.n_kv_heads, cfg.head_dim), cdt),
+                    "v": mk((n, batch, seq, cfg.n_kv_heads, cfg.head_dim), cdt)}
+    ssm = lambda n: {
+        "conv": mk((n, batch, 3, cfg.ssm_inner + 2 * cfg.ssm_state), cdt),
+        "ssm": mk((n, batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+                  jnp.float32)}
+
+    if cfg.family == "ssm":
+        return {"layers": ssm(cfg.n_layers)}
+    if cfg.family == "hybrid":
+        n_blocks = cfg.n_layers // cfg.attn_period
+        n_mamba = cfg.attn_period - 1
+        c = {"attn": kv(n_blocks)}
+        m = ssm(n_blocks)
+        c["mamba"] = jax.tree.map(
+            lambda a: (jax.ShapeDtypeStruct((a.shape[0], n_mamba, *a.shape[1:]), a.dtype)
+                       if abstract else
+                       jnp.zeros((a.shape[0], n_mamba, *a.shape[1:]), a.dtype)), m)
+        return c
+    if cfg.family == "vlm":
+        n_periods = cfg.n_layers // cfg.cross_attn_period
+        n_self = cfg.cross_attn_period - 1
+        selfkv = {
+            "k": mk((n_periods, n_self, batch, seq, cfg.n_kv_heads, cfg.head_dim), cdt),
+            "v": mk((n_periods, n_self, batch, seq, cfg.n_kv_heads, cfg.head_dim), cdt)}
+        crosskv = kv(n_periods)
+        xkv = {
+            "xk": mk((n_periods, batch, cfg.n_image_tokens, cfg.n_kv_heads, cfg.head_dim), cdt),
+            "xv": mk((n_periods, batch, cfg.n_image_tokens, cfg.n_kv_heads, cfg.head_dim), cdt)}
+        return {"self": selfkv, "cross": xkv}
+    return {"layers": kv(cfg.n_layers)}
+
+
+def _attn_decode_block(cfg, p, x, ck, cv, pos, window=0):
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    a, ck, cv = L.attn_decode(cfg, p["attn"], h, ck, cv, pos, window=window)
+    return x + a, ck, cv
+
+
+def _mamba_decode_block(cfg, p, x, conv, state):
+    h = L.rms_norm(x, p["ln1" if "ln1" in p else "ln"], cfg.norm_eps)
+    y, (conv, state) = L.mamba_layer(cfg, p["mamba"], h, conv_cache=conv,
+                                     ssm_state=state, decode=True)
+    return x + y, conv, state
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, pos):
+    """One autoregressive step.  tokens: [B] int32; pos: scalar int32.
+    Returns (next_tokens [B], new_cache)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = jnp.take(params["embed"].astype(cdt), tokens, axis=0)[:, None, :]
+
+    if cfg.family == "ssm":
+        def layer_fn(x, xs):
+            lp, c = xs
+            x, conv, state = _mamba_decode_block(cfg, lp, x, c["conv"], c["ssm"])
+            return x, {"conv": conv, "ssm": state}
+        x, new_layers = lax.scan(layer_fn, x, (params["layers"], cache["layers"]))
+        new_cache = {"layers": new_layers}
+
+    elif cfg.family == "hybrid":
+        period, _ = _hybrid_period(cfg)
+
+        def block_fn(carry, xs):
+            x = carry
+            bp, ckv, cm = xs
+            mi = 0
+            new_m = {"conv": [], "ssm": []}
+            new_kv = None
+            for mixer, ffn, key, slot in period:
+                cnt = sum(1 for m, f, k, s in period if k == key)
+                lp = (jax.tree.map(lambda a: a[slot], bp[key])
+                      if cnt > 1 else bp[key])
+                if mixer == "attn":
+                    x, ck, cv = _attn_decode_block(cfg, lp, x, ckv["k"], ckv["v"], pos)
+                    new_kv = {"k": ck, "v": cv}
+                else:
+                    x, conv, st = _mamba_decode_block(
+                        cfg, lp, x, cm["conv"][mi], cm["ssm"][mi])
+                    new_m["conv"].append(conv)
+                    new_m["ssm"].append(st)
+                    mi += 1
+                x, _ = _ffn_block(cfg, lp, x)
+            nm = {"conv": jnp.stack(new_m["conv"], 0),
+                  "ssm": jnp.stack(new_m["ssm"], 0)}
+            return x, (new_kv, nm)
+
+        x, (nkv, nm) = lax.scan(block_fn, x, (params["blocks"], cache["attn"], cache["mamba"]))
+        new_cache = {"attn": nkv, "mamba": nm}
+
+    elif cfg.family == "vlm":
+        def period_fn(x, xs):
+            pp, cself, ccross = xs
+
+            def self_fn(x, ys):
+                lp, ck, cv = ys
+                x, ck, cv = _attn_decode_block(cfg, lp, x, ck, cv, pos)
+                x, _ = _ffn_block(cfg, lp, x)
+                return x, {"k": ck, "v": cv}
+            x, nself = lax.scan(self_fn, x, (pp["self"], cself["k"], cself["v"]))
+            cp = pp["cross"]
+            h = L.rms_norm(x, cp["lnx"], cfg.norm_eps)
+            a = L.cross_attn_decode(cfg, cp["xattn"], h, ccross["xk"], ccross["xv"])
+            x = x + jnp.tanh(cp["gate"].astype(x.dtype)) * a
+            x, _ = _ffn_block(cfg, cp, x)
+            return x, nself
+
+        x, nself = lax.scan(period_fn, x,
+                            (params["periods"], cache["self"], cache["cross"]))
+        new_cache = {"self": nself, "cross": cache["cross"]}
+
+    else:
+        windows = _layer_windows(cfg)
+
+        def layer_fn(x, xs):
+            lp, c, window = xs
+            x, ck, cv = _attn_decode_block(cfg, lp, x, c["k"], c["v"], pos, window)
+            x, _ = _ffn_block(cfg, lp, x)
+            return x, {"k": ck, "v": cv}
+        x, new_layers = lax.scan(layer_fn, x,
+                                 (params["layers"], cache["layers"], windows))
+        new_cache = {"layers": new_layers}
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x[:, 0] @ params["lm_head"].astype(cdt)).astype(jnp.float32)
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32), new_cache
+
+
+def prefill(cfg: ModelConfig, params, batch, *, attn_impl="flash",
+            constrain=None):
+    """Prefill pass: forward over S tokens, returning (last_logits, cache)."""
+    cons = constrain if constrain is not None else (lambda a: a)
+    cdt = jnp.dtype(cfg.compute_dtype)
+    if cfg.embed_input:
+        x = batch["embeds"].astype(cdt)
+    else:
+        x = jnp.take(params["embed"].astype(cdt), batch["tokens"], axis=0)
+    B, S = x.shape[:2]
+    positions = jnp.arange(S)[None, :]
+    image = batch.get("image_embeds")
+    if image is not None:
+        image = image.astype(cdt)
+
+    def attn_pre(lp, x, window=0):
+        x = cons(x)
+        h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        a, k, v = L.attn_forward(cfg, lp["attn"], h, positions, window=window,
+                                 attn_impl=attn_impl)
+        return x + a, {"k": k, "v": v}
+
+    def mamba_pre(lp, x):
+        x = cons(x)
+        h = L.rms_norm(x, lp["ln1" if "ln1" in lp else "ln"], cfg.norm_eps)
+        y, (conv, st) = L.mamba_layer(cfg, lp["mamba"], h, return_state=True)
+        return x + y, {"conv": conv, "ssm": st}
+
+    if cfg.family == "ssm":
+        def layer_fn(x, lp):
+            x, c = mamba_pre(lp, x)
+            return x, c
+        x, caches = lax.scan(layer_fn, x, params["layers"])
+        new_cache = {"layers": caches}
+
+    elif cfg.family == "hybrid":
+        period, _ = _hybrid_period(cfg)
+
+        def block_fn(x, bp):
+            kv, mcaches = None, []
+            for mixer, ffn, key, slot in period:
+                cnt = sum(1 for m, f, k, s in period if k == key)
+                lp = (jax.tree.map(lambda a: a[slot], bp[key])
+                      if cnt > 1 else bp[key])
+                if mixer == "attn":
+                    x2, kv = attn_pre(lp, x)
+                    x = x2
+                else:
+                    x, c = mamba_pre(lp, x)
+                    mcaches.append(c)
+                x, _ = _ffn_block(cfg, lp, x)
+            mc = jax.tree.map(lambda *a: jnp.stack(a, 0), *mcaches)
+            return x, (kv, mc)
+
+        x, (kv, mc) = lax.scan(block_fn, x, params["blocks"])
+        new_cache = {"attn": kv, "mamba": mc}
+
+    elif cfg.family == "vlm":
+        def period_fn(x, pp):
+            def self_fn(x, lp):
+                x, c = attn_pre(lp, x)
+                x, _ = _ffn_block(cfg, lp, x)
+                return x, c
+            x, cself = lax.scan(self_fn, x, pp["self"])
+            cp = pp["cross"]
+            h = L.rms_norm(x, cp["lnx"], cfg.norm_eps)
+            a, xk, xv = L.cross_attn_forward(cfg, cp["xattn"], h, image)
+            x = x + jnp.tanh(cp["gate"].astype(x.dtype)) * a
+            x, _ = _ffn_block(cfg, cp, x)
+            return x, (cself, {"xk": xk, "xv": xv})
+
+        x, (cself, xkv) = lax.scan(period_fn, x, params["periods"])
+        new_cache = {"self": cself, "cross": xkv}
+
+    else:
+        windows = _layer_windows(cfg)
+
+        def layer_fn(x, xs):
+            lp, window = xs
+            x, c = attn_pre(lp, x, window)
+            x, _ = _ffn_block(cfg, lp, x)
+            return x, c
+        x, caches = lax.scan(layer_fn, x, (params["layers"], windows))
+        new_cache = {"layers": caches}
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x[:, -1] @ params["lm_head"].astype(cdt)).astype(jnp.float32)
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# inputs
+# ---------------------------------------------------------------------------
+
+def input_structs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of a cell."""
+    B, S = shape.global_batch, shape.seq_len
+    cdt = jnp.dtype(cfg.compute_dtype)
+    i32 = jnp.dtype("int32")
+    if shape.kind == "decode":
+        batch = {"tokens": jax.ShapeDtypeStruct((B,), i32),
+                 "pos": jax.ShapeDtypeStruct((), i32)}
+        return batch
+    batch = {}
+    if cfg.embed_input:
+        batch["embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), cdt)
+    else:
+        batch["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+    if cfg.family == "vlm":
+        batch["image_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_image_tokens, cfg.d_model), cdt)
+    if shape.kind == "train":
+        batch["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+    return batch
+
+
+def make_inputs(cfg: ModelConfig, shape_or_bs, key=None, seq=None):
+    """Concrete random inputs (smoke tests / examples)."""
+    if isinstance(shape_or_bs, ShapeConfig):
+        B, S, kind = shape_or_bs.global_batch, shape_or_bs.seq_len, shape_or_bs.kind
+    else:
+        B, S, kind = shape_or_bs, seq, "train"
+    key = key if key is not None else jax.random.PRNGKey(0)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    cdt = jnp.dtype(cfg.compute_dtype)
+    batch = {}
+    if kind == "decode":
+        return {"tokens": jax.random.randint(k1, (B,), 0, cfg.vocab_size),
+                "pos": jnp.array(S - 1, jnp.int32)}
+    if cfg.embed_input:
+        batch["embeds"] = jax.random.normal(k1, (B, S, cfg.d_model), cdt)
+    else:
+        batch["tokens"] = jax.random.randint(k1, (B, S), 0, cfg.vocab_size)
+    if cfg.family == "vlm":
+        batch["image_embeds"] = jax.random.normal(
+            k2, (B, cfg.n_image_tokens, cfg.d_model), cdt)
+    if kind == "train":
+        batch["labels"] = jax.random.randint(k3, (B, S), 0, cfg.vocab_size)
+    return batch

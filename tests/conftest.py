@@ -1,0 +1,38 @@
+import os
+import subprocess
+import sys
+
+import jax
+import pytest
+
+# Tests run single-device (the dry-run sets its own 512-device flag in a
+# subprocess); keep CPU math deterministic-ish.
+jax.config.update("jax_enable_x64", False)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def run_with_devices(code: str, n: int = 8, timeout: int = 420):
+    """Run a snippet in a fresh interpreter with n forced host devices."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
+    env["PYTHONPATH"] = SRC
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, timeout=timeout)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    return r.stdout
+
+
+@pytest.fixture(scope="session")
+def siren_setup():
+    import jax.numpy as jnp
+    from repro.configs.siren import SirenConfig
+    from repro.inr.siren import siren_fn, siren_init
+
+    cfg = SirenConfig(hidden_features=64, hidden_layers=2)
+    params = siren_init(cfg, jax.random.PRNGKey(0))
+    f = siren_fn(cfg, params)
+    x = jax.random.uniform(jax.random.PRNGKey(1),
+                           (cfg.batch, cfg.in_features), jnp.float32, -1, 1)
+    return cfg, params, f, x

@@ -1,0 +1,121 @@
+"""Deadlock analysis — the paper's Fig. 5/6 examples, exactly."""
+
+import numpy as np
+import pytest
+
+from repro.core.dataflow import (DataflowDesign, DataflowGraph, Process, Step,
+                                 Stream, map_to_dataflow)
+from repro.core.graph import ComputeGraph
+
+
+def fig5_graph(n_blocks=8):
+    """src -> {Mm(., W), Cos} -> Mul (paper Fig. 5)."""
+    g = ComputeGraph()
+    x = g.add("Input", (n_blocks, 8), "float32", params=(("idx", 0),))
+    w = g.add("Const", (8, 8), "float32",
+              const=np.zeros((8, 8), np.float32))
+    mm = g.add("Mm", (n_blocks, 8), "float32", (x, w))
+    cos = g.add("Cos", (n_blocks, 8), "float32", (x,))
+    mul = g.add("Mul", (n_blocks, 8), "float32", (mm, cos))
+    g.outputs = [mul]
+    return g
+
+
+def test_fig5_default_depths_deadlock():
+    """'If all FIFOs use their default depth of 2 and there are more than
+    five outputs from the source node, this computation graph is guaranteed
+    to cause a deadlock.'"""
+    g = fig5_graph(8)
+    design = map_to_dataflow(g, block=8)
+    dg = DataflowGraph(design)
+    dead, _, _ = dg.check({s: 2 for s in design.streams})
+    assert dead
+
+
+def test_fig5_few_blocks_no_deadlock():
+    """<= depth+... small streams don't deadlock at depth 2."""
+    g = fig5_graph(2)
+    design = map_to_dataflow(g, block=8)
+    dg = DataflowGraph(design)
+    dead, _, _ = dg.check({s: 2 for s in design.streams})
+    assert not dead
+
+
+def test_fig5_resolution_by_deepening():
+    """'increase the stream depth of Cos's input to the total number of
+    elements' resolves the deadlock."""
+    g = fig5_graph(8)
+    design = map_to_dataflow(g, block=8)
+    dg = DataflowGraph(design)
+    depths = {s: 2 for s in design.streams}
+    cos_in = [s for s, st in design.streams.items()
+              if st.consumer.startswith("Cos")]
+    depths[cos_in[0]] = 8
+    dead, lat, _ = dg.check(depths)
+    assert not dead and lat > 0
+
+
+def test_unconstrained_never_deadlocks():
+    g = fig5_graph(16)
+    design = map_to_dataflow(g, block=8)
+    dg = DataflowGraph(design)
+    dead, lat, _ = dg.check(None)
+    assert not dead
+
+
+def fig6_design():
+    """Paper Fig. 6: producer writes A0 A1 B0 A2; consumer reads B0 A0 A1 A2."""
+    streams = {0: Stream(0, "A", 3, 4), 1: Stream(1, "B", 1, 4)}
+    prod = Process("producer", [
+        Step(writes=((0, 0),)), Step(writes=((0, 1),)),
+        Step(writes=((1, 0),)), Step(writes=((0, 2),)),
+    ])
+    cons = Process("consumer", [
+        Step(reads=((1, 0),)), Step(reads=((0, 0),)),
+        Step(reads=((0, 1),)), Step(reads=((0, 2),)),
+    ])
+    return DataflowDesign([prod, cons], streams)
+
+
+def test_fig6_depth2_deadlock():
+    """With both depths 2, write A2 -> write B0 -> read B0 -> read A0 ->
+    write A2 forms the paper's cycle... wait: paper's producer order is
+    A0 A1 A2 B0.  Use the exact paper order."""
+    streams = {0: Stream(0, "A", 3, 4), 1: Stream(1, "B", 1, 4)}
+    prod = Process("producer", [
+        Step(writes=((0, 0),)), Step(writes=((0, 1),)),
+        Step(writes=((0, 2),)), Step(writes=((1, 0),)),
+    ])
+    cons = Process("consumer", [
+        Step(reads=((1, 0),)), Step(reads=((0, 0),)),
+        Step(reads=((0, 1),)), Step(reads=((0, 2),)),
+    ])
+    design = DataflowDesign([prod, cons], streams)
+    dg = DataflowGraph(design)
+    dead, _, _ = dg.check({0: 2, 1: 2})
+    assert dead, "paper Fig. 6(d): cycle exists at depth 2"
+    # paper's fix: 'stream A, whose depth must be increased from 2 to 3'
+    dead2, _, _ = dg.check({0: 3, 1: 2})
+    assert not dead2
+
+
+def test_war_edges_count():
+    """write#n depends on read#(n-d): exactly len(writes)-d WAR edges/stream."""
+    design = fig6_design()
+    dg = DataflowGraph(design)
+    war = dg.war_edges({0: 2, 1: 2})
+    # stream 0 has 3 writes -> 1 WAR edge at depth 2; stream 1 has 1 -> 0
+    assert len(war) == 1
+
+
+def test_latency_monotone_in_depth():
+    """Deeper FIFOs can never be slower (WAR edges only relax)."""
+    g = fig5_graph(8)
+    design = map_to_dataflow(g, block=8)
+    dg = DataflowGraph(design)
+    _, lat_unc, _ = dg.check(None)
+    big = {s: 64 for s in design.streams}
+    dead, lat_big, _ = dg.check(big)
+    assert not dead
+    assert lat_big >= lat_unc  # equality when 64 >= every stream's blocks
+    assert lat_big == lat_unc

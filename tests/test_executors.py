@@ -1,0 +1,88 @@
+"""Executor equivalence: direct fn == reference == streaming == codegen."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import codegen
+from repro.core import executor as ex
+from repro.core.passes import optimize
+from repro.core.trace import extract_graph
+from repro.inr.gradnet import paper_gradients
+
+
+@pytest.mark.parametrize("order", [1, 2])
+def test_all_executors_agree(order, siren_setup):
+    cfg, params, f, x = siren_setup
+    gfn = paper_gradients(f, order, cfg.out_features, cfg.in_features)
+    want = gfn(x)
+    g = extract_graph(gfn, x)
+    optimize(g)
+
+    got_ref = ex.reference_executor(g)(x)
+    for a, b in zip(want, got_ref):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+    assert ex.check_streamable(g)
+    got_s = ex.streaming_executor(g, block=8)(x)
+    for a, b in zip(want, got_s):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+    src = codegen.emit_python(g, block=8)
+    pipe, _ = codegen.load_generated(src)
+    got_c = pipe(codegen.graph_consts(g), x)
+    for a, b in zip(want, got_c):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+def test_streaming_block_size_invariance(siren_setup):
+    cfg, params, f, x = siren_setup
+    gfn = paper_gradients(f, 1, cfg.out_features, cfg.in_features)
+    g = extract_graph(gfn, x)
+    optimize(g)
+    outs = {}
+    for blk in (4, 16, 64):
+        outs[blk] = ex.streaming_executor(g, block=blk)(x)
+    for blk in (16, 64):
+        for a, b in zip(outs[4], outs[blk]):
+            np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+def test_memory_accounting():
+    """Streaming peak (residents + FIFOs) << buffered peak, the paper's
+    memory claim — evaluated at the paper's own SIREN size (256 hidden,
+    batch 64, 2nd order)."""
+    from repro.configs.siren import SirenConfig
+    from repro.core.dataflow import map_to_dataflow
+    from repro.core.fifo_opt import optimize_fifo_depths
+    from repro.inr.siren import siren_fn, siren_init
+
+    cfg = SirenConfig()                      # paper config: 256x3, batch 64
+    params = siren_init(cfg, jax.random.PRNGKey(0))
+    f = siren_fn(cfg, params)
+    x = jnp.zeros((cfg.batch, cfg.in_features))
+    gfn = paper_gradients(f, 2, cfg.out_features, cfg.in_features)
+    g = extract_graph(gfn, x)
+    optimize(g)
+    design = map_to_dataflow(g, block=64)
+    res = optimize_fifo_depths(design)
+    buffered_eager = ex.buffered_total_bytes(g)     # paper's CPU/GPU analogue
+    buffered_packed = ex.buffered_peak_bytes(g)     # optimistic baseline
+    streamed = ex.streaming_peak_bytes(g, design, res.depths_after)
+    # weights are resident either way; activation streaming must win vs the
+    # eager baseline (paper Table I: 3.1-8.9x), and FIFO memory must be a
+    # small fraction of what full buffering of the streams would need
+    assert streamed < buffered_eager
+    assert streamed < 2 * buffered_packed
+
+
+def test_codegen_source_is_loadable_and_documented(siren_setup):
+    cfg, params, f, x = siren_setup
+    gfn = paper_gradients(f, 1, cfg.out_features, cfg.in_features)
+    g = extract_graph(gfn, x)
+    optimize(g)
+    src = codegen.emit_python(g, block=8, depths={0: 2})
+    assert "Auto-generated" in src and "def pipeline" in src
+    pipe, ns = codegen.load_generated(src)
+    assert callable(pipe)

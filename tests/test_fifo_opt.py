@@ -1,0 +1,82 @@
+"""FIFO depth optimization (paper Sec. 3.2.4 / Table IV)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.dataflow import DataflowGraph, map_to_dataflow
+from repro.core.fifo_opt import optimize_fifo_depths
+from repro.core.passes import optimize
+from repro.core.trace import extract_graph
+from repro.inr.gradnet import paper_gradients
+
+
+@pytest.fixture(scope="module")
+def siren_design(request):
+    from repro.configs.siren import SirenConfig
+    from repro.inr.siren import siren_fn, siren_init
+    cfg = SirenConfig(hidden_features=64, hidden_layers=2)
+    params = siren_init(cfg, jax.random.PRNGKey(0))
+    f = siren_fn(cfg, params)
+    x = jnp.zeros((cfg.batch, cfg.in_features))
+    gfn = paper_gradients(f, 1, cfg.out_features, cfg.in_features)
+    g = extract_graph(gfn, x)
+    optimize(g)
+    return map_to_dataflow(g, block=64, mm_parallel=64)
+
+
+def test_optimized_depths_respect_latency_budget(siren_design):
+    res = optimize_fifo_depths(siren_design, alpha=0.01)
+    assert res.latency_after <= res.latency_peak * 1.01 + 1
+
+
+def test_optimized_depths_reduce_memory(siren_design):
+    res = optimize_fifo_depths(siren_design, alpha=0.01)
+    assert res.sum_after < res.sum_before          # paper: -85..88%
+    assert res.sum_after <= 0.6 * res.sum_before   # conservative bound
+
+
+def test_min_depth_respected(siren_design):
+    res = optimize_fifo_depths(siren_design)
+    assert all(d >= 2 for d in res.depths_after.values())
+
+
+def test_final_design_not_deadlocked(siren_design):
+    res = optimize_fifo_depths(siren_design)
+    dg = DataflowGraph(siren_design)
+    dead, lat, _ = dg.check(res.depths_after)
+    assert not dead
+
+
+def test_deterministic(siren_design):
+    a = optimize_fifo_depths(siren_design)
+    b = optimize_fifo_depths(siren_design)
+    assert a.depths_after == b.depths_after
+    assert a.latency_after == b.latency_after
+
+
+def test_alpha_zero_keeps_peak_latency(siren_design):
+    res = optimize_fifo_depths(siren_design, alpha=0.0)
+    assert res.latency_after <= res.latency_peak
+
+
+def test_mm_parallelism_tradeoff(siren_design):
+    """Table II: lower MM parallelism -> higher latency, same analysis."""
+    import jax.numpy as jnp
+    from repro.configs.siren import SirenConfig
+    from repro.inr.siren import siren_fn, siren_init
+    from repro.inr.gradnet import paper_gradients
+    cfg = SirenConfig(hidden_features=64, hidden_layers=2)
+    params = siren_init(cfg, jax.random.PRNGKey(0))
+    f = siren_fn(cfg, params)
+    x = jnp.zeros((cfg.batch, cfg.in_features))
+    gfn = paper_gradients(f, 1, cfg.out_features, cfg.in_features)
+    lats = {}
+    for mmp in (64, 16):
+        g = extract_graph(gfn, x)
+        optimize(g)
+        d = map_to_dataflow(g, block=64, mm_parallel=mmp)
+        dg = DataflowGraph(d)
+        _, lat, _ = dg.check(None)
+        lats[mmp] = lat
+    assert lats[16] > lats[64]

@@ -1,0 +1,121 @@
+"""Graph extraction + the four optimization passes (paper Sec. 3.2.2)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.graph import ComputeGraph
+from repro.core.passes import (dedupe_common_subtrees, dedupe_common_transposes,
+                               optimize, permute_to_transpose,
+                               remove_transpose_pairs)
+from repro.core.trace import extract_graph
+from repro.inr.gradnet import paper_gradients
+
+
+def _mk_T(g, src, shape):
+    return g.add("T", (shape[1], shape[0]), "float32", (src,))
+
+
+def test_extract_simple():
+    g = extract_graph(lambda a, b: jnp.sin(a @ b),
+                      jnp.zeros((4, 5)), jnp.zeros((5, 6)))
+    ops = g.counts_by_op()
+    assert ops.get("Mm") == 1 and ops.get("Sin") == 1
+    assert ops.get("Input") == 2
+    g.validate()
+
+
+def test_dedupe_merges_identical_subtrees():
+    g = extract_graph(lambda a: jnp.sin(a) * jnp.sin(a), jnp.zeros((3, 3)))
+    before = len(g)
+    removed = dedupe_common_subtrees(g)
+    assert removed >= 1
+    assert g.counts_by_op().get("Sin") == 1
+    g.validate()
+
+
+def test_permute_to_T_only_2d_swap():
+    g = ComputeGraph()
+    x = g.add("Input", (4, 6), "float32", params=(("idx", 0),))
+    p2 = g.add("Permute", (6, 4), "float32", (x,), (("permutation", (1, 0)),))
+    y = g.add("Input", (2, 3, 4), "float32", params=(("idx", 1),))
+    p3 = g.add("Permute", (4, 3, 2), "float32", (y,), (("permutation", (2, 1, 0)),))
+    g.outputs = [p2, p3]
+    n = permute_to_transpose(g)
+    assert n == 1
+    assert g.nodes[p2].op == "T" and g.nodes[p3].op == "Permute"
+
+
+def test_remove_T_pairs_chain():
+    """T chains collapse mod 2 (paper: 'leaving zero or one T node')."""
+    g = ComputeGraph()
+    x = g.add("Input", (4, 6), "float32", params=(("idx", 0),))
+    t1 = _mk_T(g, x, (4, 6))
+    t2 = _mk_T(g, t1, (6, 4))
+    t3 = _mk_T(g, t2, (4, 6))
+    t4 = _mk_T(g, t3, (6, 4))
+    sink = g.add("Sin", (4, 6), "float32", (t4,))
+    g.outputs = [sink]
+    remove_transpose_pairs(g)
+    g.validate()
+    # even-length chain cancels entirely
+    assert g.counts_by_op().get("T", 0) == 0
+    assert g.nodes[sink].inputs == (x,)
+
+
+def test_remove_T_pairs_odd_chain():
+    g = ComputeGraph()
+    x = g.add("Input", (4, 6), "float32", params=(("idx", 0),))
+    t1 = _mk_T(g, x, (4, 6))
+    t2 = _mk_T(g, t1, (6, 4))
+    t3 = _mk_T(g, t2, (4, 6))
+    g.outputs = [t3]
+    remove_transpose_pairs(g)
+    assert g.counts_by_op().get("T", 0) == 1
+
+
+def test_dedupe_common_Ts():
+    g = ComputeGraph()
+    x = g.add("Input", (4, 6), "float32", params=(("idx", 0),))
+    t1 = _mk_T(g, x, (4, 6))
+    t2 = _mk_T(g, x, (4, 6))
+    s1 = g.add("Sin", (6, 4), "float32", (t1,))
+    s2 = g.add("Cos", (6, 4), "float32", (t2,))
+    g.outputs = [s1, s2]
+    removed = dedupe_common_transposes(g)
+    assert removed == 1
+    assert g.counts_by_op()["T"] == 1
+
+
+@pytest.mark.parametrize("order", [1, 2])
+def test_passes_preserve_semantics_on_siren(order, siren_setup):
+    """Optimized graph computes the same values (lossless passes)."""
+    from repro.core.executor import reference_executor
+    cfg, params, f, x = siren_setup
+    gfn = paper_gradients(f, order, cfg.out_features, cfg.in_features)
+    want = gfn(x)
+    g = extract_graph(gfn, x)
+    optimize(g)
+    got = reference_executor(g)(x)
+    for a, b in zip(want, got):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+def test_table3_shape_of_reductions(siren_setup):
+    """Dedupe is the dominant optimization and growth is exponential in
+    order (qualitative Table III claims)."""
+    cfg, params, f, x = siren_setup
+    sizes = {}
+    for order in (1, 2, 3):
+        gfn = paper_gradients(f, order, cfg.out_features, cfg.in_features)
+        g = extract_graph(gfn, x)
+        before = len(g)
+        dedupe_common_subtrees(g)
+        sizes[order] = (before, len(g))
+    # raw graphs grow superlinearly; deduped growth is much slower
+    assert sizes[2][0] > 2.5 * sizes[1][0]
+    assert sizes[3][0] > 2.5 * sizes[2][0]
+    # dedupe removes a large fraction at order >= 2 (paper: -92%)
+    assert sizes[2][1] < 0.6 * sizes[2][0]
+    assert sizes[3][1] < 0.35 * sizes[3][0]

@@ -1,0 +1,86 @@
+"""Scan-aware HLO cost analyzer: calibration against known workloads."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.distributed.hlo_cost import analyze
+from tests.conftest import run_with_devices
+
+M = N = K = 128
+
+
+def _flops(fn, *args):
+    c = jax.jit(fn).lower(*args).compile()
+    return analyze(c.as_text())
+
+
+def test_single_matmul_flops():
+    r = _flops(lambda a, b: a @ b,
+               jax.ShapeDtypeStruct((M, K), jnp.float32),
+               jax.ShapeDtypeStruct((K, N), jnp.float32))
+    want = 2 * M * N * K
+    assert abs(r["flops"] - want) / want < 0.02
+
+
+def test_scan_multiplies_by_trip_count():
+    def scanned(a, b):
+        def body(x, _):
+            return jnp.sin(x @ b), None
+        x, _ = jax.lax.scan(body, a, None, length=10)
+        return x
+    r = _flops(scanned, jax.ShapeDtypeStruct((M, K), jnp.float32),
+               jax.ShapeDtypeStruct((K, N), jnp.float32))
+    want = 10 * 2 * M * N * K
+    assert abs(r["flops"] - want) / want < 0.05
+
+
+def test_nested_scan():
+    def nested(a, b):
+        def outer(x, _):
+            def inner(y, _):
+                return y @ b, None
+            y, _ = jax.lax.scan(inner, x, None, length=3)
+            return y, None
+        x, _ = jax.lax.scan(outer, a, None, length=5)
+        return x
+    r = _flops(nested, jax.ShapeDtypeStruct((M, K), jnp.float32),
+               jax.ShapeDtypeStruct((K, N), jnp.float32))
+    want = 15 * 2 * M * N * K
+    assert abs(r["flops"] - want) / want < 0.05
+
+
+def test_collectives_counted_with_trips():
+    code = """
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.distributed.hlo_cost import analyze
+
+M = N = K = 128
+mesh = jax.make_mesh((8,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
+sh = NamedSharding(mesh, P(None, "x"))
+
+def scanned(a, b):
+    def body(x, _):
+        return jnp.sin(x @ b) @ b.T, None
+    x, _ = jax.lax.scan(body, a, None, length=7)
+    return x
+
+c = jax.jit(scanned, in_shardings=(None, sh)).lower(
+    jax.ShapeDtypeStruct((M, K), jnp.float32),
+    jax.ShapeDtypeStruct((K, N), jnp.float32)).compile()
+r = analyze(c.as_text())
+ar = r["collectives"]["all-reduce"]
+assert ar["count"] == 7, ar
+assert abs(ar["bytes"] - 7 * M * N * 4) / (7 * M * N * 4) < 0.01, ar
+print("COLL_OK")
+"""
+    out = run_with_devices(code, n=8)
+    assert "COLL_OK" in out
+
+
+def test_streamed_bytes_leq_raw():
+    def chain(a):
+        return jnp.tanh(jnp.sin(a) * 2.0 + 1.0)
+    r = _flops(chain, jax.ShapeDtypeStruct((1024, 1024), jnp.float32))
+    assert r["bytes_streamed"] <= r["bytes_raw"]

@@ -1,0 +1,109 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEYS = jax.random.split(jax.random.PRNGKey(42), 8)
+
+
+@pytest.mark.parametrize("m,k,n", [(64, 64, 64), (128, 256, 128),
+                                   (100, 130, 50), (1, 64, 1), (37, 7, 129)])
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_stream_matmul(m, k, n, dtype):
+    dt = jnp.dtype(dtype)
+    a = jax.random.normal(KEYS[0], (m, k), jnp.float32).astype(dt)
+    b = jax.random.normal(KEYS[1], (k, n), jnp.float32).astype(dt)
+    got = ops.stream_matmul(a, b, bm=32, bn=32, bk=32)
+    want = ref.stream_matmul(a, b)
+    tol = 1e-4 if dtype == "float32" else 2e-2
+    np.testing.assert_allclose(got.astype(jnp.float32),
+                               want.astype(jnp.float32), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("b,k,n", [(64, 64, 64), (100, 2, 96), (64, 256, 1)])
+@pytest.mark.parametrize("apply_sin", [True, False])
+def test_siren_layer(b, k, n, apply_sin):
+    x = jax.random.normal(KEYS[0], (b, k), jnp.float32)
+    w = jax.random.normal(KEYS[1], (k, n), jnp.float32) * 0.05
+    bias = jax.random.normal(KEYS[2], (n,), jnp.float32)
+    got = ops.siren_layer(x, w, bias, apply_sin=apply_sin, bm=32, bn=32, bk=32)
+    want = ref.siren_layer(x, w, bias, apply_sin=apply_sin)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("chain,extras", [
+    ((("sin", None),), 0),
+    ((("sin", None), ("scale", 30.0)), 0),
+    ((("cos", None), ("mul", None)), 1),
+    ((("silu", None), ("mul", None), ("offset", 1.0)), 1),
+    ((("square", None), ("add", None), ("sub", None)), 2),
+])
+def test_fused_chain(chain, extras):
+    x = jax.random.normal(KEYS[0], (200, 33), jnp.float32)
+    ex = tuple(jax.random.normal(KEYS[i + 1], (200, 33), jnp.float32) + 2.0
+               for i in range(extras))
+    got = ops.fused_chain(x, chain, ex, block_rows=64)
+    want = ref.fused_chain(x, chain, ex)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("sq,sk,h,kh,d", [
+    (64, 64, 4, 4, 32),     # MHA
+    (64, 64, 8, 2, 32),     # GQA 4:1
+    (32, 128, 4, 1, 64),    # MQA, decode-ish q<k
+])
+@pytest.mark.parametrize("window", [0, 16])
+def test_flash_attention(sq, sk, h, kh, d, window):
+    q = jax.random.normal(KEYS[0], (2, sq, h, d), jnp.float32)
+    k = jax.random.normal(KEYS[1], (2, sk, kh, d), jnp.float32)
+    v = jax.random.normal(KEYS[2], (2, sk, kh, d), jnp.float32)
+    got = ops.flash_attention(q, k, v, causal=True, window=window, bq=16, bk=32)
+    want = ref.flash_attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+
+
+def test_flash_attention_matches_model_layer():
+    """Kernel agrees with the model zoo's jnp flash implementation."""
+    from repro.models.layers import flash_attention as jnp_flash
+    q = jax.random.normal(KEYS[0], (1, 96, 4, 16), jnp.float32)
+    k = jax.random.normal(KEYS[1], (1, 96, 2, 16), jnp.float32)
+    v = jax.random.normal(KEYS[2], (1, 96, 2, 16), jnp.float32)
+    got = ops.flash_attention(q, k, v, causal=True, bq=32, bk=32)
+    want = jnp_flash(q, k, v, causal=True, q_block=32, kv_block=32)
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("bh,nc,p,n", [(4, 8, 16, 8), (1, 1, 4, 4), (12, 3, 8, 16)])
+def test_ssd_scan(bh, nc, p, n):
+    st = jax.random.normal(KEYS[0], (bh, nc, p, n), jnp.float32)
+    dec = jax.nn.sigmoid(jax.random.normal(KEYS[1], (bh, nc)))
+    got = ops.ssd_scan(st, dec)
+    want = ref.ssd_scan(st, dec)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_ssd_scan_matches_model_ssd():
+    """Kernel recurrence == the inter-chunk scan inside ssd_chunked."""
+    from repro.models.layers import ssd_chunked
+    b, s, h, p, n, chunk = 2, 32, 4, 8, 8, 8
+    xh = jax.random.normal(KEYS[0], (b, s, h, p), jnp.float32) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(KEYS[1], (b, s, h)))
+    a_log = jnp.log(jnp.linspace(1.0, 4.0, h))
+    B = jax.random.normal(KEYS[2], (b, s, n), jnp.float32) * 0.5
+    C = jax.random.normal(KEYS[3], (b, s, n), jnp.float32) * 0.5
+    y = ssd_chunked(xh, dt, a_log, B, C, chunk)
+    # brute-force recurrence oracle
+    a = -jnp.exp(a_log)
+    state = jnp.zeros((b, h, p, n))
+    ys = []
+    for t in range(s):
+        da = jnp.exp(dt[:, t] * a[None, :])
+        state = state * da[..., None, None] + jnp.einsum(
+            "bh,bhp,bn->bhpn", dt[:, t], xh[:, t], B[:, t])
+        ys.append(jnp.einsum("bhpn,bn->bhp", state, C[:, t]))
+    want = jnp.stack(ys, 1)
+    np.testing.assert_allclose(y, want, rtol=2e-3, atol=2e-3)

@@ -1,0 +1,125 @@
+"""Property-based tests (hypothesis) on system invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dataflow import DataflowGraph, map_to_dataflow
+from repro.core.executor import reference_executor
+from repro.core.graph import ComputeGraph
+from repro.core.passes import optimize
+from repro.distributed import compression as comp
+from repro.distributed.hlo_cost import type_bytes
+
+UNARY = ["Sin", "Cos", "Exp", "Tanh", "Neg", "Abs"]
+BINARY = ["Add", "Sub", "Mul", "Maximum", "Minimum"]
+
+
+@st.composite
+def random_graph(draw):
+    """Random well-formed batched compute graph over one input [B, F]."""
+    B = draw(st.sampled_from([4, 8]))
+    F = draw(st.sampled_from([3, 5, 8]))
+    g = ComputeGraph()
+    nodes = [g.add("Input", (B, F), "float32", params=(("idx", 0),))]
+    shapes = {nodes[0]: (B, F)}
+    n_ops = draw(st.integers(3, 24))
+    for _ in range(n_ops):
+        kind = draw(st.sampled_from(["u", "b", "mm"]))
+        if kind == "u":
+            src = draw(st.sampled_from(nodes))
+            op = draw(st.sampled_from(UNARY))
+            nid = g.add(op, shapes[src], "float32", (src,))
+        elif kind == "b":
+            # pick two same-shape operands
+            src1 = draw(st.sampled_from(nodes))
+            cands = [n for n in nodes if shapes[n] == shapes[src1]]
+            src2 = draw(st.sampled_from(cands))
+            op = draw(st.sampled_from(BINARY))
+            nid = g.add(op, shapes[src1], "float32", (src1, src2))
+        else:
+            src = draw(st.sampled_from(nodes))
+            b, f = shapes[src]
+            fo = draw(st.sampled_from([2, 4, 6]))
+            w = draw(st.integers(0, 10 ** 6))
+            rng = np.random.default_rng(w)
+            wconst = g.add("Const", (f, fo), "float32",
+                           const=rng.normal(size=(f, fo)).astype(np.float32) * 0.3)
+            nid = g.add("Mm", (b, fo), "float32", (src, wconst))
+        nodes.append(nid)
+        shapes[nid] = g.nodes[nid].shape
+    outs = draw(st.lists(st.sampled_from(nodes[1:]), min_size=1, max_size=3))
+    g.outputs = list(outs)
+    return g, (shapes[nodes[0]])
+
+
+@settings(max_examples=30, deadline=None)
+@given(random_graph())
+def test_passes_preserve_semantics(gs):
+    """optimize() is lossless on arbitrary graphs."""
+    g, in_shape = gs
+    x = jnp.asarray(np.random.default_rng(0).normal(size=in_shape),
+                    jnp.float32)
+    before = reference_executor(g)(x)
+    optimize(g)
+    after = reference_executor(g)(x)
+    assert len(before) == len(after)
+    for a, b in zip(before, after):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(random_graph(), st.integers(2, 6))
+def test_unconstrained_dataflow_is_acyclic(gs, block):
+    """For any graph, the unconstrained dataflow graph never deadlocks and
+    big-enough depths match unconstrained latency."""
+    g, _ = gs
+    optimize(g)
+    design = map_to_dataflow(g, block=block)
+    dg = DataflowGraph(design)
+    dead, lat, _ = dg.check(None)
+    assert not dead
+    full = {s: design.streams[s].n_blocks + 1 for s in design.streams}
+    dead2, lat2, _ = dg.check(full)
+    assert not dead2 and lat2 == lat
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.floats(-1e3, 1e3, allow_nan=False), min_size=1,
+                max_size=256))
+def test_quantization_error_bound(xs):
+    x = jnp.asarray(np.array(xs, np.float32))
+    q, s = comp._quantize(x)
+    err = np.abs(np.asarray(comp._dequantize(q, s)) - np.asarray(x))
+    assert err.max() <= float(s) * 0.5 + 1e-5
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.sampled_from(["f32", "bf16", "s8", "pred"]),
+       st.lists(st.integers(1, 64), min_size=0, max_size=3))
+def test_hlo_type_bytes(dt, dims):
+    nbytes = {"f32": 4, "bf16": 2, "s8": 1, "pred": 1}[dt]
+    s = f"{dt}[{','.join(map(str, dims))}]"
+    want = nbytes * int(np.prod(dims)) if dims else nbytes
+    assert type_bytes(s) == want
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 6), st.integers(1, 8), st.integers(2, 8))
+def test_ssd_chunk_invariance(b, h, s_mult):
+    """ssd_chunked output is invariant to chunk length (algebraic identity
+    of the state-space duality)."""
+    from repro.models.layers import ssd_chunked
+    s = 4 * s_mult
+    p, n = 4, 4
+    key = jax.random.PRNGKey(b * 100 + h)
+    ks = jax.random.split(key, 4)
+    xh = jax.random.normal(ks[0], (b, s, h, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    a_log = jnp.zeros((h,))
+    B = jax.random.normal(ks[2], (b, s, n)) * 0.5
+    C = jax.random.normal(ks[3], (b, s, n)) * 0.5
+    y1 = ssd_chunked(xh, dt, a_log, B, C, chunk=4)
+    y2 = ssd_chunked(xh, dt, a_log, B, C, chunk=s)
+    np.testing.assert_allclose(y1, y2, rtol=2e-4, atol=2e-4)
