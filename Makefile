@@ -1,0 +1,14 @@
+# Tier-1 verification and benchmarks (see ROADMAP.md / scripts/ci.sh)
+
+PY ?= python
+
+.PHONY: test bench bench-segments
+
+test:
+	PYTHONPATH=src $(PY) -m pytest -x -q
+
+bench:
+	PYTHONPATH=src $(PY) -m benchmarks.run
+
+bench-segments:
+	PYTHONPATH=src $(PY) -m benchmarks.run segments

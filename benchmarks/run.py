@@ -8,8 +8,8 @@ Prints ``name,us_per_call,derived`` CSV lines.
 import sys
 
 from benchmarks import (higher_order, kernels_bench, roofline,
-                        table1_latency, table2_parallelism, table3_graphopt,
-                        table4_fifo)
+                        segments_bench, table1_latency, table2_parallelism,
+                        table3_graphopt, table4_fifo)
 
 ALL = {
     "table1": table1_latency.run,
@@ -18,6 +18,7 @@ ALL = {
     "table4": table4_fifo.run,
     "roofline": roofline.run,
     "kernels": kernels_bench.run,
+    "segments": segments_bench.run,
     "higher_order": higher_order.run,       # opt-in: ~3 min FIFO search
 }
 DEFAULT = [n for n in ALL if n != "higher_order"]

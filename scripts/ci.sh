@@ -1,0 +1,5 @@
+#!/usr/bin/env bash
+# Tier-1 CI: the suite must be reproducibly green from a clean checkout.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

@@ -28,17 +28,10 @@ import math
 from dataclasses import dataclass, field
 
 from repro.core.graph import ComputeGraph, Node
-
-# ops that stream block-by-block with no buffering (1:1 or N:1)
-STREAMING_OPS = {
-    "Sin", "Cos", "Mul", "Add", "Sub", "Div", "Neg", "Exp", "Log", "Tanh",
-    "Pow", "IntPow", "Convert", "Select", "Maximum", "Minimum", "Identity",
-    "Rsqrt", "Sqrt", "Abs", "Sign", "Sigmoid", "Erf", "Broadcast",
-}
-# ops that must buffer their whole input before producing output
-BUFFERING_OPS = {"T", "Permute", "Reshape", "Sum", "Max", "Concat", "Slice", "Pad"}
-# matrix multiply: buffers the streamed operand, then emits output blocks
-MM_OPS = {"Mm"}
+# op taxonomy lives with the SegmentPlan now; re-exported for compatibility
+from repro.core.segment import (BUFFERING, BUFFERING_OPS, FUSED_MM_ACT,
+                                MATMUL, MM_OPS, STREAMING_OPS, SegmentPlan,
+                                build_segment_plan)
 
 
 @dataclass
@@ -89,19 +82,20 @@ def _n_blocks(node: Node, block: int) -> int:
 
 
 def map_to_dataflow(g: ComputeGraph, *, block: int = 64,
-                    mm_parallel: int = 64, dtype_bytes: int = 4
-                    ) -> DataflowDesign:
-    """Map an optimized ComputeGraph onto the dataflow architecture."""
-    consumers = g.consumers()
+                    mm_parallel: int = 64, dtype_bytes: int = 4,
+                    plan: SegmentPlan | None = None) -> DataflowDesign:
+    """Map a SegmentPlan onto the dataflow architecture.
+
+    Processes and streams are derived from the SAME plan the executor runs
+    and the codegen emits (DESIGN.md §3): one process per segment (a fused
+    stream kernel), one array stream per inter-segment tensor USE, plus
+    Input sources, copy_stream multicasters for fan-out, and output sinks.
+    Intra-segment tensors never touch a FIFO — they live in the kernel."""
+    if plan is None:
+        plan = build_segment_plan(g)
     streams: dict[int, Stream] = {}
     procs: list[Process] = []
     sid = 0
-
-    # stream bookkeeping: for every (producer node, consumer node, arg slot)
-    # there is exactly one stream.  Multi-consumer producers go through a
-    # copy_stream process.
-    out_stream_of: dict[int, list[int]] = {}   # node -> streams it WRITES
-    in_streams_of: dict[int, list[int]] = {i: [] for i in g.nodes}
 
     def new_stream(node: Node) -> int:
         nonlocal sid
@@ -111,121 +105,113 @@ def map_to_dataflow(g: ComputeGraph, *, block: int = 64,
         sid += 1
         return s.id
 
-    order = g.topo_order()
-    # producer side: one output stream per node (to consumer or copier)
-    for nid in order:
-        node = g.nodes[nid]
-        if node.op == "Const":
-            continue                      # resident weights, not streamed
-        cons = [c for c in consumers[nid]
-                if g.nodes[c].op != "Const"]
-        # dedupe can leave the same node as MULTIPLE graph outputs
-        # (e.g. symmetric mixed partials) — each occurrence needs a stream
-        n_out = len(cons) + g.outputs.count(nid)
-        if n_out == 0:
-            out_stream_of[nid] = []
-            continue
-        if n_out == 1:
+    # every USE of a produced tensor outside its segment gets its own stream
+    # (the paper's one-producer-one-consumer rule); uses are keyed so each
+    # consuming (segment, node, slot) / sink occurrence is distinct
+    use_lists: dict[int, list[tuple]] = {}     # tensor node -> ordered uses
+    seg_uses: dict[int, list[tuple]] = {s.id: [] for s in plan.segments}
+    for seg in plan.segments:
+        node_set = set(seg.nodes)
+        for nid in seg.nodes:
+            for slot, i in enumerate(g.nodes[nid].inputs):
+                if i in plan.resident or i in node_set:
+                    continue               # residents are on-chip, not FIFOs
+                key = ("seg", seg.id, nid, slot)
+                use_lists.setdefault(i, []).append(key)
+                seg_uses[seg.id].append(key)
+    # dedupe can leave the same node as MULTIPLE graph outputs (e.g.
+    # symmetric mixed partials) — each occurrence needs a stream.  Resident
+    # (const-derived) outputs never flow through a FIFO: the host reads them
+    # from resident memory, so they get neither a stream nor a sink.
+    for j, o in enumerate(g.outputs):
+        if o not in plan.resident:
+            use_lists.setdefault(o, []).append(("sink", j))
+
+    # allocate streams producer-side: direct, or through a copy_stream
+    # process that writes each block to its outputs ROUND-ROBIN (paper
+    # Sec. 3.1.2 — and the source of the Fig. 5 deadlock)
+    producer_stream: dict[int, int] = {}       # tensor -> stream it WRITES
+    use_stream: dict[tuple, int] = {}          # use key -> stream it READS
+    pos = {nid: k for k, nid in enumerate(g.topo_order())}
+    for t in sorted(use_lists, key=pos.get):
+        node = g.nodes[t]
+        uses = use_lists[t]
+        if len(uses) == 1:
             s = new_stream(node)
-            out_stream_of[nid] = [s]
+            producer_stream[t] = s
+            use_stream[uses[0]] = s
         else:
-            # producer -> copier stream, copier -> one stream per consumer
             s_in = new_stream(node)
-            outs = [new_stream(node) for _ in range(n_out)]
-            out_stream_of[nid] = [s_in]
-            # copy_stream process: read block i, then write it to each
-            # output IN SEQUENCE (round-robin) — paper Sec. 3.1.2
-            cp = Process(f"copy{nid}")
-            nb = _n_blocks(node, block)
-            for i in range(nb):
+            outs = [new_stream(node) for _ in uses]
+            producer_stream[t] = s_in
+            for key, s in zip(uses, outs):
+                use_stream[key] = s
+            cp = Process(f"copy{t}")
+            for i in range(_n_blocks(node, block)):
                 cp.steps.append(Step(reads=((s_in, i),), delay=0))
                 for o in outs:
                     cp.steps.append(Step(writes=((o, i),), delay=0))
             cp.steps.append(Step(delay=1))
             procs.append(cp)
-            out_stream_of[nid] = [s_in]
-            out_stream_of[(nid, "copies")] = outs
 
-    # wire consumer input streams in arg order
-    copy_cursor: dict[int, int] = {}
-    for nid in order:
+    # Input sources feed the pipeline
+    for nid in plan.inputs:
+        if nid not in producer_stream:
+            continue                           # unused input: no stream
         node = g.nodes[nid]
-        for arg in node.inputs:
-            if g.nodes[arg].op == "Const":
-                in_streams_of[nid].append(-1)      # resident operand
-                continue
-            outs = out_stream_of.get((arg, "copies"))
-            if outs is None:
-                s = out_stream_of[arg][0]
-            else:
-                k = copy_cursor.get(arg, 0)
-                s = outs[k]
-                copy_cursor[arg] = k + 1
-        # (separate loop below fills names)
-            in_streams_of[nid].append(s)
+        p = Process(f"Input{nid}")
+        s = producer_stream[nid]
+        for i in range(_n_blocks(node, block)):
+            p.steps.append(Step(writes=((s, i),), delay=1))
+        procs.append(p)
 
-    # graph outputs read from the last copy (or the single stream)
-    sink_streams: list[int] = []
-    for o in g.outputs:
-        outs = out_stream_of.get((o, "copies"))
-        if outs is None:
-            sink_streams.append(out_stream_of[o][0])
-        else:
-            k = copy_cursor.get(o, 0)
-            sink_streams.append(outs[k])
-            copy_cursor[o] = k + 1
+    # one process per segment
+    for seg in plan.segments:
+        ins = [use_stream[k] for k in seg_uses[seg.id]]
+        out_s = producer_stream.get(seg.output)
+        outs = [out_s] if out_s is not None else []
+        out_node = g.nodes[seg.output]
+        nb_out = _n_blocks(out_node, block)
+        name = "+".join(g.nodes[n].op for n in seg.nodes) + str(seg.nodes[0])
+        p = Process(name)
+        nbs = [streams[s].n_blocks for s in ins]
 
-    # build kernel processes
-    for nid in order:
-        node = g.nodes[nid]
-        if node.op == "Const":
-            continue
-        ins = [s for s in in_streams_of[nid] if s >= 0]
-        outs = out_stream_of.get(nid, [])
-        nb_out = _n_blocks(node, block)
-        p = Process(f"{node.op}{nid}")
-
-        if node.op == "Input":
-            for i in range(nb_out):
-                p.steps.append(Step(writes=tuple((s, i) for s in outs), delay=1))
-        elif node.op in MM_OPS and ins:
+        if seg.kind in (MATMUL, FUSED_MM_ACT):
             # buffer every streamed operand fully (round-robin across them),
             # then emit output blocks at the MM initiation interval
-            nbs = [streams[s].n_blocks for s in ins]
-            for i in range(max(nbs)):
+            for i in range(max(nbs, default=0)):
                 rd = tuple((s, i) for s, nb in zip(ins, nbs) if i < nb)
                 p.steps.append(Step(reads=rd, delay=1))
-            k_dim = node.shape[-1] if node.shape else 1
-            # II per output block ~ contraction work / parallelism
-            lhs = g.nodes[node.inputs[0]]
+            mm = g.nodes[seg.meta.get("mm", seg.nodes[0])]
+            lhs = g.nodes[mm.inputs[0]]
             kk = lhs.shape[-1] if lhs.shape else 1
             ii = max(1, math.ceil(kk / mm_parallel))
             for i in range(nb_out):
-                p.steps.append(Step(writes=tuple((s, i) for s in outs), delay=ii))
-        elif node.op in BUFFERING_OPS and ins:
-            nbs = [streams[s].n_blocks for s in ins]
-            for i in range(max(nbs)):
+                p.steps.append(Step(writes=tuple((s, i) for s in outs),
+                                    delay=ii))
+        elif seg.kind == BUFFERING:
+            for i in range(max(nbs, default=0)):
                 rd = tuple((s, i) for s, nb in zip(ins, nbs) if i < nb)
                 p.steps.append(Step(reads=rd, delay=1))
             for i in range(nb_out):
-                p.steps.append(Step(writes=tuple((s, i) for s in outs), delay=1))
-        elif ins:
-            # streaming: read block i from every input, write block i
-            nbs = [streams[s].n_blocks for s in ins]
+                p.steps.append(Step(writes=tuple((s, i) for s in outs),
+                                    delay=1))
+        else:
+            # StreamChain: read block i from every input, write block i —
+            # the whole fused chain costs one step per block
             nb = max([nb_out] + nbs)
             for i in range(nb):
                 rd = tuple((s, i) for s, b in zip(ins, nbs) if i < b)
                 wr = tuple((s, i) for s in outs) if i < nb_out else ()
                 p.steps.append(Step(reads=rd, writes=wr, delay=1))
-        else:
-            # no streamed inputs (pure const computation): emit directly
-            for i in range(nb_out):
-                p.steps.append(Step(writes=tuple((s, i) for s in outs), delay=1))
         if p.steps:
             procs.append(p)
 
     # sinks
-    for j, s in enumerate(sink_streams):
+    for j, o in enumerate(g.outputs):
+        if o in plan.resident:
+            continue
+        s = use_stream[("sink", j)]
         p = Process(f"sink{j}")
         for i in range(streams[s].n_blocks):
             p.steps.append(Step(reads=((s, i),), delay=1))

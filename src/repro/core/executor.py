@@ -5,30 +5,24 @@
   execution the paper compares against.
 
 * ``streaming_executor`` is the TPU-native analogue of the INR-Arch dataflow
-  architecture: const-derived tensors (weights, their transposes, broadcast
-  constants) are PRECOMPUTED RESIDENTS (the paper keeps weights on-chip);
-  every Input-derived tensor is streamed in blocks along the batch dimension
-  through a fused per-block pipeline (``lax.map`` over blocks), so peak live
-  memory is residents + one block's working set — the role the FIFO streams
-  play on the FPGA.
+  architecture, driven by the SegmentPlan (DESIGN.md §3): const-derived
+  tensors are PRECOMPUTED RESIDENTS (the paper keeps weights on-chip); the
+  batch dim is split into blocks that flow segment-by-segment through the
+  plan under ``lax.map``, each segment dispatching to its Pallas stream
+  kernel (fused_chain / stream_matmul / siren_layer) or to the per-node
+  interpreter as a reference fallback.
 
 Both are built from the same IR, so they agree numerically (tests assert it).
 """
 
 from __future__ import annotations
 
-import math
-from functools import partial
-
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.graph import ComputeGraph, Node
-
-
-def _p(node: Node, key, default=None):
-    return dict(node.params).get(key, default)
+from repro.core.segment import (INTERPRET, SegmentPlan, build_segment_plan,
+                                classify_residents, segment_dispatch, _p)
 
 
 def _eval_node(node: Node, args, block_b: int | None = None):
@@ -120,71 +114,6 @@ def _eval_node(node: Node, args, block_b: int | None = None):
     raise NotImplementedError(f"executor: op {op} ({node.params})")
 
 
-def _classify(g: ComputeGraph):
-    """Split nodes into const-derived (resident) and stream-carried."""
-    resident: set[int] = set()
-    for nid in g.topo_order():
-        n = g.nodes[nid]
-        if n.op == "Const":
-            resident.add(nid)
-        elif n.op == "Input":
-            continue
-        elif n.inputs and all(i in resident for i in n.inputs):
-            resident.add(nid)
-    streamed = [nid for nid in g.topo_order() if nid not in resident]
-    return resident, streamed
-
-
-def _row_const(g: ComputeGraph, resident: set[int]) -> set[int]:
-    """Residents whose rows (axis 0) are all identical, so slicing [:block]
-    is valid.  Provenance-based — a weight whose dim0 merely COINCIDES with
-    the batch size must never be sliced.  Typical members: the all-ones
-    cotangent seed of reverse mode and everything derived from it."""
-    rc: set[int] = set()
-    elementwise = {"Sin", "Cos", "Mul", "Add", "Sub", "Div", "Neg", "Exp",
-                   "Log", "Tanh", "Rsqrt", "Sqrt", "Abs", "Sign", "Sigmoid",
-                   "Erf", "IntPow", "Pow", "Maximum", "Minimum", "Select",
-                   "Convert", "Identity"}
-
-    def arg_ok(i, out_rank):
-        """Operand is row-const, or broadcasts without touching axis 0."""
-        return i in rc or len(g.nodes[i].shape) < out_rank
-
-    for nid in g.topo_order():
-        if nid not in resident:
-            continue
-        n = g.nodes[nid]
-        rank = len(n.shape)
-        if n.op == "Const":
-            if rank == 0 or (n.const is not None and n.shape and n.shape[0] > 0
-                             and bool(np.all(n.const == n.const[:1]))):
-                rc.add(nid)
-        elif n.op == "Broadcast":
-            bdims = tuple(_p(n, "broadcast_dimensions", ()))
-            if 0 not in bdims:
-                rc.add(nid)                     # axis 0 is freshly broadcast
-            elif bdims and bdims[0] == 0 and n.inputs[0] in rc:
-                rc.add(nid)                     # operand axis0 (row-const) maps up
-        elif n.op == "Pad":
-            pc = _p(n, "padding_config", ())
-            if pc and tuple(pc[0]) == (0, 0, 0) and n.inputs[0] in rc:
-                rc.add(nid)
-        elif n.op == "Slice":
-            if n.inputs and n.inputs[0] in rc:
-                rc.add(nid)
-        elif n.op == "Mm":
-            if n.inputs and n.inputs[0] in rc:
-                rc.add(nid)                     # identical lhs rows -> identical out rows
-        elif n.op == "Sum":
-            axes = tuple(_p(n, "axes", ()))
-            if n.inputs and n.inputs[0] in rc and 0 not in axes:
-                rc.add(nid)
-        elif n.op in elementwise and n.inputs:
-            if all(arg_ok(i, rank) for i in n.inputs):
-                rc.add(nid)
-    return rc
-
-
 def reference_executor(g: ComputeGraph):
     """Returns f(*inputs) evaluating the graph op-by-op (buffered)."""
     order = g.topo_order()
@@ -205,7 +134,7 @@ def reference_executor(g: ComputeGraph):
 
 def check_streamable(g: ComputeGraph) -> bool:
     """Every stream-carried tensor must keep the batch dim in axis 0."""
-    resident, streamed = _classify(g)
+    resident, streamed = classify_residents(g)
     inputs = [n for n in g.nodes.values() if n.op == "Input"]
     if not inputs:
         return False
@@ -243,20 +172,97 @@ def check_streamable(g: ComputeGraph) -> bool:
     return True
 
 
-def streaming_executor(g: ComputeGraph, block: int = 8):
-    """Returns f(*inputs) that executes the graph as a block pipeline.
+def _run_segment(plan: SegmentPlan, seg, kernel: str, env, res_env,
+                 block: int, B: int):
+    """Execute one segment on one block; returns the segment's output."""
+    g = plan.graph
 
-    Residents are computed once; the batch dim is split into blocks and the
-    whole stream-carried subgraph runs per block under ``lax.map`` (the
-    dataflow pipeline).  Peak live memory ~ residents + one block working set.
+    def val(i):
+        if i in plan.resident:
+            a = res_env[i]
+            # broadcast-row-constant residents shrink to one block; weights
+            # (even if dim0 == B) stay whole
+            if i in plan.rowconst and a.ndim and a.shape[:1] == (B,):
+                a = a[:block]
+            return a
+        return env[i]
+
+    if kernel == "stream_matmul":
+        from repro.kernels.stream_matmul import stream_matmul
+        mm = g.nodes[seg.nodes[0]]
+        return stream_matmul(env[mm.inputs[0]], res_env[mm.inputs[1]])
+
+    if kernel == "siren_layer":
+        from repro.kernels.siren_layer import siren_layer
+        mm = g.nodes[seg.meta["mm"]]
+        x = env[mm.inputs[0]]
+        w = res_env[mm.inputs[1]]
+        if seg.meta["bias"] is None:
+            b = jnp.zeros((w.shape[1],), x.dtype)
+        else:
+            # bias is (N,), (1, N), or a row-const (B, N): one row is the vector
+            b = res_env[seg.meta["bias"]]
+            b = b[0] if b.ndim == 2 else b
+        return siren_layer(x, w, b, w0=seg.meta["w0"],
+                           apply_sin=seg.meta["apply_sin"])
+
+    if kernel == "fused_chain":
+        from repro.kernels.fused_chain import fused_chain
+        spec = seg.meta["chain"]
+        x = val(spec.x)
+        extras = []
+        for e in spec.extras:
+            a = val(e)
+            extras.append(a if a.shape == x.shape
+                          else jnp.broadcast_to(a, x.shape))
+        return fused_chain(x, spec.steps, tuple(extras))
+
+    # reference fallback: interpret the segment node-by-node
+    local: dict[int, jax.Array] = {}
+    node_set = set(seg.nodes)
+    for nid in seg.nodes:
+        n = g.nodes[nid]
+        args = [local[i] if i in node_set else val(i) for i in n.inputs]
+        local[nid] = _eval_node(n, args, block_b=block)
+    return local[seg.output]
+
+
+def streaming_executor(g: ComputeGraph, block: int = 8, *,
+                       plan: SegmentPlan | None = None,
+                       use_pallas: bool | None = None,
+                       dispatch_log: list | None = None):
+    """Returns f(*inputs) that executes the SegmentPlan as a block pipeline.
+
+    Residents are computed once; the batch dim is split into blocks and each
+    block flows through the plan's segments under ``lax.map`` (the dataflow
+    pipeline), so peak live memory ~ residents + one block working set.
+
+    ``use_pallas`` selects per-segment Pallas kernel dispatch (fused_chain /
+    stream_matmul / siren_layer); the default enables it on TPU and falls
+    back to the per-node interpreter elsewhere (kernels themselves also run
+    in interpret mode off-TPU, so ``use_pallas=True`` is valid — just slower
+    — on CPU).  ``dispatch_log``, if given, receives one
+    ``(segment_id, kind, kernel)`` entry per segment — the plan-level record
+    of what was dispatched.
     """
     assert check_streamable(g), "graph is not batch-streamable"
-    resident_ids, streamed = _classify(g)
-    rowconst = _row_const(g, resident_ids)
-    order = g.topo_order()
-    inputs_nodes = sorted((n for n in g.nodes.values() if n.op == "Input"),
-                          key=lambda n: _p(n, "idx"))
-    B = inputs_nodes[0].shape[0]
+    if plan is None:
+        plan = build_segment_plan(g)
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    decisions = {
+        s.id: (segment_dispatch(plan, s) if use_pallas else INTERPRET)
+        for s in plan.segments}
+    if dispatch_log is not None:
+        dispatch_log.extend((s.id, s.kind, decisions[s.id])
+                            for s in plan.segments)
+
+    res_order = plan.resident_order()
+    input_nodes = [g.nodes[i] for i in plan.inputs]
+    # resident (const-derived) outputs never stream: they are returned from
+    # resident memory, exactly as map_to_dataflow models them (no FIFO)
+    streamed_outs = [o for o in g.outputs if o not in plan.resident]
+    B = plan.batch
     block = min(block, B)
     assert B % block == 0, (B, block)
     n_blocks = B // block
@@ -264,40 +270,31 @@ def streaming_executor(g: ComputeGraph, block: int = 8):
     def f(*inputs):
         # phase 1: residents (weights, transposed weights, const broadcasts)
         res_env: dict[int, jax.Array] = {}
-        for nid in order:
+        for nid in res_order:
             n = g.nodes[nid]
-            if nid not in resident_ids:
-                continue
             if n.op == "Const":
                 res_env[nid] = jnp.asarray(n.const)
             else:
                 res_env[nid] = _eval_node(n, [res_env[i] for i in n.inputs])
 
-        # phase 2: stream blocks
+        # phase 2: stream blocks through the segments (plan topo order)
         def block_fn(xblk):
-            env: dict[int, jax.Array] = {}
-            for nid in streamed:
-                n = g.nodes[nid]
-                if n.op == "Input":
-                    env[nid] = xblk[_p(n, "idx")]
-                    continue
-                args = []
-                for i in n.inputs:
-                    if i in resident_ids:
-                        a = res_env[i]
-                        # broadcast-row-constant residents shrink to one
-                        # block; weights (even if dim0 == B) stay whole
-                        if i in rowconst and a.ndim and a.shape[:1] == (B,):
-                            a = a[:block]
-                        args.append(a)
-                    else:
-                        args.append(env[i])
-                env[nid] = _eval_node(n, args, block_b=block)
-            return tuple(env[o] for o in g.outputs)
+            env: dict[int, jax.Array] = {
+                n.id: xblk[_p(n, "idx")] for n in input_nodes}
+            for seg in plan.segments:
+                env[seg.output] = _run_segment(plan, seg, decisions[seg.id],
+                                               env, res_env, block, B)
+            return tuple(env[o] for o in streamed_outs)
 
-        xblocks = tuple(x.reshape(n_blocks, block, *x.shape[1:]) for x in inputs)
-        outs = jax.lax.map(block_fn, xblocks)
-        return tuple(o.reshape(B, *o.shape[2:]) for o in outs)
+        if streamed_outs:
+            xblocks = tuple(x.reshape(n_blocks, block, *x.shape[1:])
+                            for x in inputs)
+            outs = jax.lax.map(block_fn, xblocks)
+            streamed_vals = iter(o.reshape(B, *o.shape[2:]) for o in outs)
+        else:
+            streamed_vals = iter(())
+        return tuple(res_env[o] if o in plan.resident else next(streamed_vals)
+                     for o in g.outputs)
     return f
 
 
@@ -338,14 +335,18 @@ def buffered_total_bytes(g: ComputeGraph) -> int:
     return sum(_nbytes(n) for n in g.nodes.values())
 
 
-def streaming_peak_bytes(g: ComputeGraph, design, depths: dict[int, int]) -> int:
+def streaming_peak_bytes(g: ComputeGraph, design, depths: dict[int, int], *,
+                         plan: SegmentPlan | None = None) -> int:
     """Residents + FIFO memory (depths x block bytes) — the dataflow memory.
 
-    Row-constant residents (reverse-mode seeds and their derivatives) store
-    ONE row — their content is identical across the batch, so the dataflow
-    design re-broadcasts a single block."""
-    resident_ids, _ = _classify(g)
-    rc = _row_const(g, resident_ids)
+    Derived from the same SegmentPlan that executes and maps to FIFOs, so the
+    accounting sees exactly the segments that run.  Row-constant residents
+    (reverse-mode seeds and their derivatives) store ONE row — their content
+    is identical across the batch, so the dataflow design re-broadcasts a
+    single block."""
+    if plan is None:
+        plan = build_segment_plan(g)
+    resident_ids, rc = plan.resident, plan.rowconst
     res = 0
     for i in resident_ids:
         n = g.nodes[i]

@@ -129,10 +129,7 @@ def extract_graph(fn, *example_args, flatten_outputs=True) -> ComputeGraph:
             if inner is not None:
                 # inline call primitive: bind consts + args into inner env
                 sub_env = {}
-                const_ids = [read(v, consts_env) if not isinstance(v, jcore.Var)
-                             else consts_env[v] for v in []]
                 in_ids = [read(v, consts_env) for v in eqn.invars]
-                nconsts = len(inner.constvars)
                 # consts of ClosedJaxpr come first as literals
                 for cv, cval in zip(inner.constvars, inner_consts):
                     arr = np.asarray(cval)

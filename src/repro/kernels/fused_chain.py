@@ -15,6 +15,9 @@ kernel body at trace time:
 from __future__ import annotations
 
 import functools
+from dataclasses import dataclass
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
@@ -84,3 +87,99 @@ def fused_chain(x: jax.Array, chain, extras=(), *, block_rows: int = 256,
         interpret=interpret,
     )(x, *extras)
     return out[:R]
+
+
+# ---------------------------------------------------------------------------
+# chain-spec builder: SegmentPlan StreamChain nodes -> a fused_chain call
+# ---------------------------------------------------------------------------
+
+# IR op -> kernel unary name
+_IR_UNARY = {"Sin": "sin", "Cos": "cos", "Exp": "exp", "Tanh": "tanh",
+             "Neg": "neg", "Abs": "abs", "Sigmoid": "sigmoid"}
+# IR op -> kernel binary name
+_IR_BINARY = {"Mul": "mul", "Add": "add", "Sub": "sub", "Div": "div"}
+
+
+@dataclass(frozen=True)
+class ChainSpec:
+    """A StreamChain segment lowered to one ``fused_chain`` invocation.
+
+    ``steps`` is the kernel's static ``chain`` argument; ``extras`` holds the
+    producer node id feeding each binary step's second operand, in order.
+    ``x`` is the primary streamed input the chain starts from."""
+    x: int
+    steps: tuple
+    extras: tuple[int, ...]
+
+
+def _scalar_const(g, nid):
+    """Static float of a size-1 Const node, else None (local duplicate of
+    core.segment.scalar_const_value — kernels must not import core)."""
+    n = g.nodes.get(nid)
+    if n is None or n.op != "Const" or n.const is None:
+        return None
+    if int(np.prod(n.shape)) != 1:
+        return None
+    return float(np.ravel(n.const)[0])
+
+
+def build_chain_spec(g, node_ids, *, resident):
+    """Lower an ordered run of elementwise IR nodes to a ChainSpec, or None
+    when any node is not expressible by the fused_chain kernel (the caller
+    then interprets the segment node-by-node).
+
+    Expressible ops: the _IR_UNARY map, IntPow(y=2) as square, and
+    Mul/Add/Sub/Div — with a size-1 Const operand baked in as scale/offset,
+    otherwise as a binary step streaming the second operand.  Sub/Div require
+    the chain value in the left slot (the kernel computes ``h op other``)."""
+    if not node_ids:
+        return None
+    steps: list = []
+    extras: list[int] = []
+    prev = None
+    x = None
+    for nid in node_ids:
+        n = g.nodes[nid]
+        if prev is None:
+            streamed = [i for i in n.inputs if i not in resident]
+            primary = streamed[0] if streamed else (n.inputs[0] if n.inputs
+                                                    else None)
+            if primary is None:
+                return None
+        else:
+            primary = prev
+            if primary not in n.inputs:
+                return None
+        if n.op in _IR_UNARY:
+            steps.append((_IR_UNARY[n.op], None))
+        elif n.op == "IntPow":
+            if dict(n.params).get("y") != 2:
+                return None
+            steps.append(("square", None))
+        elif n.op in _IR_BINARY:
+            if len(n.inputs) != 2:
+                return None
+            slot = 0 if n.inputs[0] == primary else 1
+            other = n.inputs[1 - slot]
+            v = _scalar_const(g, other)
+            if v is not None and n.op == "Mul":
+                steps.append(("scale", v))
+            elif v is not None and n.op == "Add":
+                steps.append(("offset", v))
+            elif v is not None and n.op == "Sub" and slot == 0:
+                steps.append(("offset", -v))
+            elif v is not None and n.op == "Div" and slot == 0 and v != 0.0:
+                steps.append(("scale", 1.0 / v))
+            else:
+                if n.op in ("Sub", "Div") and slot != 0:
+                    return None             # other - h / other / h: no kernel op
+                if other not in resident and g.nodes[other].shape != n.shape:
+                    return None             # streamed extra must match blocks
+                steps.append((_IR_BINARY[n.op], None))
+                extras.append(other)
+        else:
+            return None
+        if prev is None:
+            x = primary
+        prev = nid
+    return ChainSpec(x=x, steps=tuple(steps), extras=tuple(extras))

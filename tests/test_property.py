@@ -1,8 +1,14 @@
-"""Property-based tests (hypothesis) on system invariants."""
+"""Property-based tests (hypothesis) on system invariants.
+
+hypothesis is an optional dev dependency (pyproject [dev] extra); the module
+skips cleanly when it is not installed so `pytest -x` still collects."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.dataflow import DataflowGraph, map_to_dataflow

@@ -1,0 +1,180 @@
+"""SegmentPlan IR: coverage invariants, compile-path parity across all three
+consumers (executor / codegen / dataflow), and Pallas kernel dispatch."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import codegen
+from repro.core import executor as ex
+from repro.core.passes import optimize
+from repro.core.segment import (build_segment_plan, dispatch_table,
+                                segment_dispatch)
+from repro.core.trace import extract_graph
+from repro.inr.gradnet import paper_gradients
+
+
+def _siren_graph(siren_setup, order):
+    cfg, params, f, x = siren_setup
+    gfn = paper_gradients(f, order, cfg.out_features, cfg.in_features)
+    g = extract_graph(gfn, x)
+    optimize(g)
+    return g, gfn, x
+
+
+@pytest.mark.parametrize("order", [1, 2, 3])
+def test_plan_covers_every_node_exactly_once(siren_setup, order):
+    """Every non-Const node is an Input, a resident, or in EXACTLY one
+    segment; segments never overlap each other or the resident set."""
+    g, _, _ = _siren_graph(siren_setup, order)
+    plan = build_segment_plan(g)
+    covered = [n for s in plan.segments for n in s.nodes]
+    assert len(covered) == len(set(covered)), "a node is in two segments"
+    want = {nid for nid, n in g.nodes.items()
+            if n.op != "Const" and n.op != "Input" and nid not in plan.resident}
+    assert set(covered) == want
+    non_const = {nid for nid, n in g.nodes.items() if n.op != "Const"}
+    assert non_const <= (set(covered) | plan.resident | set(plan.inputs))
+    assert plan.validate()
+
+
+@pytest.mark.parametrize("order", [1, 2, 3])
+def test_compile_path_parity(siren_setup, order):
+    """reference_executor == streaming_executor == exec-loaded emit_python
+    (per-segment codegen) to fp32 tolerance, all from one SegmentPlan."""
+    g, gfn, x = _siren_graph(siren_setup, order)
+    plan = build_segment_plan(g)
+    want = ex.reference_executor(g)(x)
+
+    got_s = ex.streaming_executor(g, block=8, plan=plan)(x)
+    for a, b in zip(want, got_s):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+    src = codegen.emit_python(g, block=8, plan=plan)
+    pipe, _ = codegen.load_generated(src)
+    got_c = pipe(codegen.graph_consts(g, plan), x)
+    for a, b in zip(want, got_c):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+def test_codegen_one_function_per_segment(siren_setup):
+    """The emitted module has exactly one function per segment and no
+    monolithic block_fn."""
+    g, _, _ = _siren_graph(siren_setup, 2)
+    plan = build_segment_plan(g)
+    src = codegen.emit_python(g, block=8, plan=plan)
+    assert "def block_fn" not in src
+    assert src.count("def seg") == len(plan.segments)
+    for seg in plan.segments:
+        assert f"def seg{seg.id}_{seg.kind.lower()}(" in src
+    assert "def pipeline_step" in src and "def pipeline(" in src
+
+
+def test_streaming_executor_dispatches_pallas_kernels(siren_setup):
+    """On a 2nd-order SIREN gradient graph the executor dispatches at least
+    one fused_chain and one stream_matmul/siren_layer Pallas call (recorded
+    in the plan-level dispatch log) while matching the reference executor."""
+    g, _, x = _siren_graph(siren_setup, 2)
+    want = ex.reference_executor(g)(x)
+    log = []
+    got = ex.streaming_executor(g, block=8, use_pallas=True,
+                                dispatch_log=log)(x)
+    kernels = [k for _, _, k in log]
+    assert "fused_chain" in kernels
+    assert "stream_matmul" in kernels or "siren_layer" in kernels
+    for a, b in zip(want, got):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+def test_dispatch_log_matches_plan(siren_setup):
+    """The dispatch log is exactly the plan's static dispatch table."""
+    g, _, _ = _siren_graph(siren_setup, 2)
+    plan = build_segment_plan(g)
+    log = []
+    ex.streaming_executor(g, block=8, plan=plan, use_pallas=True,
+                          dispatch_log=log)
+    assert log == dispatch_table(plan)
+
+
+def test_fused_mm_act_matches_siren_forward(siren_setup):
+    """The forward-only SIREN graph fuses Mm+Add+Mul+Sin into FusedMmAct
+    segments (sine applied in the MXU epilogue, w0 baked in)."""
+    cfg, params, f, x = siren_setup
+    g = extract_graph(f, x)
+    optimize(g)
+    plan = build_segment_plan(g)
+    fused = [s for s in plan.segments if s.kind == "FusedMmAct"]
+    assert any(s.meta["apply_sin"] and s.meta["w0"] == cfg.w0 for s in fused)
+    for s in fused:
+        assert segment_dispatch(plan, s) == "siren_layer"
+    want = ex.reference_executor(g)(x)
+    got = ex.streaming_executor(g, block=8, use_pallas=True)(x)
+    for a, b in zip(want, got):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+def test_resident_output_gets_no_orphan_stream():
+    """A const-derived (resident) graph output lives in resident memory, not
+    a FIFO: the design must not contain a stream that nothing writes."""
+    import numpy as np
+    from repro.core.dataflow import map_to_dataflow
+    from repro.core.graph import ComputeGraph
+
+    g = ComputeGraph()
+    x = g.add("Input", (8, 4), "float32", params=(("idx", 0),))
+    w = g.add("Const", (4, 4), "float32",
+              const=np.ones((4, 4), np.float32))
+    sw = g.add("Sin", (4, 4), "float32", (w,))        # resident-derived
+    mm = g.add("Mm", (8, 4), "float32", (x, w))
+    g.outputs = [mm, sw]
+    plan = build_segment_plan(g)
+    assert sw in plan.resident
+    design = map_to_dataflow(g, block=8, plan=plan)
+    written = {s for p in design.processes for st in p.steps
+               for (s, _) in st.writes}
+    read = {s for p in design.processes for st in p.steps
+            for (s, _) in st.reads}
+    assert read <= written, "a stream is read but never written"
+    assert written == set(design.streams)
+
+
+def test_resident_output_served_from_resident_memory():
+    """All three plan consumers agree on const-derived (resident) graph
+    outputs: executor and generated pipeline return them from resident
+    memory instead of crashing on a node no segment produced."""
+    def f(x):
+        return x * 2.0, jnp.ones((8, 3)) * 5.0
+
+    x = jnp.arange(64 * 4, dtype=jnp.float32).reshape(64, 4)
+    g = extract_graph(f, x)
+    optimize(g)
+    plan = build_segment_plan(g)
+    assert any(o in plan.resident for o in g.outputs)
+    want = ex.reference_executor(g)(x)
+
+    got_s = ex.streaming_executor(g, block=8, plan=plan)(x)
+    for a, b in zip(want, got_s):
+        np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6)
+
+    src = codegen.emit_python(g, block=8, plan=plan)
+    pipe, _ = codegen.load_generated(src)
+    got_c = pipe(codegen.graph_consts(g, plan), x)
+    for a, b in zip(want, got_c):
+        np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6)
+
+
+def test_dataflow_processes_are_plan_segments(siren_setup):
+    """map_to_dataflow derives one process per segment (plus sources, copies
+    and sinks) from the same plan."""
+    from repro.core.dataflow import map_to_dataflow
+
+    g, _, _ = _siren_graph(siren_setup, 2)
+    plan = build_segment_plan(g)
+    design = map_to_dataflow(g, block=64, plan=plan)
+    names = {p.name for p in design.processes}
+    seg_names = {"+".join(g.nodes[n].op for n in s.nodes) + str(s.nodes[0])
+                 for s in plan.segments}
+    assert seg_names <= names
+    aux = names - seg_names
+    assert all(n.startswith(("Input", "copy", "sink")) for n in aux)
