@@ -2,13 +2,19 @@
 
 PY ?= python
 
-.PHONY: test bench bench-segments
+.PHONY: test test-fast bench bench-segments bench-pipeline
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
+
+test-fast:
+	PYTHONPATH=src $(PY) -m pytest -x -q -m "not slow"
 
 bench:
 	PYTHONPATH=src $(PY) -m benchmarks.run
 
 bench-segments:
 	PYTHONPATH=src $(PY) -m benchmarks.run segments
+
+bench-pipeline:
+	PYTHONPATH=src $(PY) -m benchmarks.run pipeline

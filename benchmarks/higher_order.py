@@ -3,8 +3,10 @@
 The paper evaluates 1st/2nd order and names higher orders as future work
 ("By expanding our framework to handle higher-order gradients...").  The
 JAX-native compiler handles order 3 with no code changes: this benchmark
-runs extraction -> passes -> dataflow -> deadlock/FIFO optimization ->
-codegen on the 3rd-order SIREN graph and validates the generated pipeline.
+compiles the 3rd-order SIREN graph once through the CompiledGradient layer
+(extraction -> passes -> plan -> residents -> codegen), runs the
+deadlock/FIFO optimization on the same plan, and validates the generated
+pipeline.
 
 Opt-in (not part of the default `benchmarks.run` set — the FIFO search on
 the order-3 design takes minutes on one CPU core):
@@ -14,13 +16,12 @@ the order-3 design takes minutes on one CPU core):
 
 import time
 
-import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit, siren_paper_setup
 from repro.core import codegen
-from repro.core.dataflow import DataflowGraph, map_to_dataflow
-from repro.core.fifo_opt import optimize_fifo_depths
+from repro.core import pipeline as P
+from repro.core.dataflow import DataflowGraph
 
 
 def run(order: int = 3):
@@ -28,29 +29,28 @@ def run(order: int = 3):
     emit(f"higher_order/order{order}/optimized_nodes", len(g.nodes),
          f"edges={g.n_edges}")
 
-    design = map_to_dataflow(g, block=64, mm_parallel=16)
+    cg = P.compile_from_graph(g, block=8)
+    t0 = time.time()
+    summary = cg.dataflow_summary(dataflow_block=64, mm_parallel=16)
+    design, res = summary["design"], summary["fifo"]
     dg = DataflowGraph(design)
     dead2, _, _ = dg.check({s: 2 for s in design.streams})
-    _, lat_peak, _ = dg.check(None)
     emit(f"higher_order/order{order}/depth2_deadlocks", int(dead2),
-         f"streams={len(design.streams)} peak_latency={lat_peak}")
-
-    t0 = time.time()
-    res = optimize_fifo_depths(design)
-    s = res.summary()
-    emit(f"higher_order/order{order}/fifo_opt_depths", s["sum_depths_after"],
-         f"before={s['sum_depths_before']} "
-         f"reduction={s['depth_reduction']*100:.1f}% "
-         f"latency_overhead={s['latency_overhead']*100:+.2f}% "
+         f"streams={len(design.streams)} "
+         f"peak_latency={summary['latency_peak']}")
+    emit(f"higher_order/order{order}/fifo_opt_depths",
+         summary["sum_depths_after"],
+         f"before={summary['sum_depths_before']} "
+         f"reduction={summary['depth_reduction']*100:.1f}% "
+         f"latency_overhead={summary['latency_overhead']*100:+.2f}% "
          f"search_wall={time.time()-t0:.0f}s")
 
-    src = codegen.emit_python(g, block=8, depths=res.depths_after)
-    pipe, _ = codegen.load_generated(src)
-    outs = pipe(codegen.graph_consts(g), x)
+    pipe, _ = codegen.load_generated(cg.source)
+    outs = pipe(codegen.graph_consts(g, cg.plan), x)
     want = gfn(x)
     err = max(float(jnp.abs(a - b).max()) for a, b in zip(want, outs))
     emit(f"higher_order/order{order}/codegen_max_err", err,
-         f"outputs={len(outs)} src_lines={len(src.splitlines())}")
+         f"outputs={len(outs)} src_lines={len(cg.source.splitlines())}")
 
 
 if __name__ == "__main__":

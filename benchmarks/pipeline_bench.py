@@ -1,0 +1,58 @@
+"""CompiledGradient front door: cold compile vs cache hit vs per-query serve.
+
+The serving claim of the pipeline layer (DESIGN.md §4) is that compilation —
+trace, optimize, plan, residents, codegen — is paid ONCE, after which queries
+stream through the jitted block pipeline at per-query cost.  This benchmark
+measures all three prices for 1st/2nd/3rd-order SIREN gradient pipelines:
+
+  * cold_compile_us  — compile_gradient on an empty cache (full pipeline);
+  * cache_hit_us     — the same call again (dict lookup, same artifact);
+  * apply_us_per_query — steady-state apply_batched, amortized per row.
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core import pipeline as P
+from repro.configs.siren import SirenConfig
+from repro.inr.siren import siren_fn, siren_init
+
+
+def run(hidden: int = 64, layers: int = 2, n_queries: int = 1000):
+    cfg = SirenConfig(hidden_features=hidden, hidden_layers=layers)
+    params = siren_init(cfg, jax.random.PRNGKey(0))
+    f = siren_fn(cfg, params)
+    x = jax.random.uniform(jax.random.PRNGKey(1),
+                           (cfg.batch, cfg.in_features), jnp.float32, -1, 1)
+    q = jax.random.uniform(jax.random.PRNGKey(2),
+                           (n_queries, cfg.in_features), jnp.float32, -1, 1)
+
+    for order in (1, 2, 3):
+        P.clear_compile_cache()
+        t0 = time.perf_counter()
+        cg = P.compile_gradient(f, order, x, block=8)
+        cold = (time.perf_counter() - t0) * 1e6
+        emit(f"pipeline/order{order}/cold_compile_us", cold,
+             f"nodes={len(cg.graph.nodes)} segments={len(cg.plan.segments)}")
+
+        samples = []
+        for _ in range(10):
+            t0 = time.perf_counter()
+            hit = P.compile_gradient(f, order, x, block=8)
+            samples.append((time.perf_counter() - t0) * 1e6)
+            assert hit is cg
+        hit_us = sorted(samples)[len(samples) // 2]
+        emit(f"pipeline/order{order}/cache_hit_us", hit_us,
+             f"speedup_vs_cold={cold / max(hit_us, 1e-3):.0f}x")
+
+        us = time_fn(lambda: cg.apply_batched(q))
+        emit(f"pipeline/order{order}/apply_us_per_query", us / n_queries,
+             f"batch={n_queries} block={cg.block} "
+             f"outputs={len(cg.graph.outputs)}")
+
+
+if __name__ == "__main__":
+    run()

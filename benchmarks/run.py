@@ -7,9 +7,9 @@ Prints ``name,us_per_call,derived`` CSV lines.
 
 import sys
 
-from benchmarks import (higher_order, kernels_bench, roofline,
-                        segments_bench, table1_latency, table2_parallelism,
-                        table3_graphopt, table4_fifo)
+from benchmarks import (higher_order, kernels_bench, pipeline_bench,
+                        roofline, segments_bench, table1_latency,
+                        table2_parallelism, table3_graphopt, table4_fifo)
 
 ALL = {
     "table1": table1_latency.run,
@@ -19,6 +19,7 @@ ALL = {
     "roofline": roofline.run,
     "kernels": kernels_bench.run,
     "segments": segments_bench.run,
+    "pipeline": pipeline_bench.run,
     "higher_order": higher_order.run,       # opt-in: ~3 min FIFO search
 }
 DEFAULT = [n for n in ALL if n != "higher_order"]

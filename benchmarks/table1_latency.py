@@ -2,23 +2,26 @@
 
 Devices differ (paper: Xeon/A6000/Alveo U50; here: one CPU + the TPU
 dataflow MODEL), so we report:
-  * measured wall time of the buffered reference executor vs the streaming
-    executor vs the generated pipeline (all jitted, this CPU);
+  * measured wall time of the buffered reference executor vs the compiled
+    streaming pipeline vs the generated (codegen) pipeline — all jitted, and
+    all built ONCE through the CompiledGradient front door so the timed
+    numbers exclude re-trace/re-plan overhead;
   * analytic memory: eager-buffered (CPU/GPU-style), liveness-packed, and
     dataflow streaming (residents + optimized FIFOs) — the paper's memory
     comparison (their Table I: 3.1-8.9x CPU, 1.7-4.3x GPU);
   * modeled dataflow latency in cycles (the FPGA-side quantity).
+
+The whole artifact — plan, emitted source, FIFO-optimized dataflow — comes
+from one compile_from_graph call; nothing below re-derives the plan.
 """
 
 import jax
 
 from benchmarks.common import emit, siren_paper_setup, time_fn
 from repro.core import codegen
-from repro.core.dataflow import DataflowGraph, map_to_dataflow
+from repro.core import pipeline as P
 from repro.core.executor import (buffered_peak_bytes, buffered_total_bytes,
-                                 check_streamable, reference_executor,
-                                 streaming_executor, streaming_peak_bytes)
-from repro.core.fifo_opt import optimize_fifo_depths
+                                 reference_executor, streaming_peak_bytes)
 
 
 def run():
@@ -28,25 +31,25 @@ def run():
         us_ref = time_fn(ref, x)
         emit(f"table1/order{order}/buffered_wall", us_ref, "reference executor")
 
-        assert check_streamable(g)
-        stream = jax.jit(streaming_executor(g, block=8))
-        us_stream = time_fn(stream, x)
+        cg = P.compile_from_graph(g, block=8)
+        us_stream = time_fn(cg.apply, x)
         emit(f"table1/order{order}/streaming_wall", us_stream,
              f"speedup_vs_buffered={us_ref/us_stream:.2f}x")
 
-        src = codegen.emit_python(g, block=8)
-        pipe, _ = codegen.load_generated(src)
-        consts = codegen.graph_consts(g)
+        pipe, _ = codegen.load_generated(cg.source)
+        consts = codegen.graph_consts(g, cg.plan)
         gen = jax.jit(lambda *a: pipe(consts, *a))
         us_gen = time_fn(gen, x)
         emit(f"table1/order{order}/codegen_wall", us_gen, "generated pipeline")
 
-        design = map_to_dataflow(g, block=64,
-                                 mm_parallel=64 if order == 1 else 16)
-        res = optimize_fifo_depths(design)
+        mm_parallel = 64 if order == 1 else 16
+        summary = cg.dataflow_summary(dataflow_block=64,
+                                      mm_parallel=mm_parallel)
+        design, res = summary["design"], summary["fifo"]
         eager = buffered_total_bytes(g)
         packed = buffered_peak_bytes(g)
-        streamed = streaming_peak_bytes(g, design, res.depths_after)
+        streamed = streaming_peak_bytes(g, design, res.depths_after,
+                                        plan=cg.plan)
         emit(f"table1/order{order}/memory_eager_bytes", eager,
              f"CPU/GPU-style; ratio_vs_stream={eager/streamed:.2f}x (paper 1.7-8.9x)")
         emit(f"table1/order{order}/memory_packed_bytes", packed,
@@ -54,10 +57,8 @@ def run():
         emit(f"table1/order{order}/memory_stream_bytes", streamed,
              "residents + optimized FIFOs")
 
-        dg = DataflowGraph(design)
-        _, lat, _ = dg.check(res.depths_after)
-        emit(f"table1/order{order}/dataflow_latency_cycles", lat,
-             f"modeled; mm_parallel={64 if order == 1 else 16}")
+        emit(f"table1/order{order}/dataflow_latency_cycles", res.latency_after,
+             f"modeled; mm_parallel={mm_parallel}")
 
 
 if __name__ == "__main__":

@@ -8,13 +8,18 @@ very similar" — the dataflow overlaps the larger graph almost entirely.
 from benchmarks.common import emit, siren_paper_setup
 from repro.core.dataflow import DataflowGraph, map_to_dataflow
 from repro.core.fifo_opt import optimize_fifo_depths
+from repro.core.segment import build_segment_plan
 
 
 def run():
     lats = {}
+    setups = {}                  # trace + plan once per order, sweep mm_parallel
     for order, mmp in ((1, 64), (1, 16), (2, 16), (2, 64)):
-        cfg, gfn, g, x = siren_paper_setup(order)
-        design = map_to_dataflow(g, block=64, mm_parallel=mmp)
+        if order not in setups:
+            _, _, g, _ = siren_paper_setup(order)
+            setups[order] = (g, build_segment_plan(g))
+        g, plan = setups[order]
+        design = map_to_dataflow(g, block=64, mm_parallel=mmp, plan=plan)
         dg = DataflowGraph(design)
         _, lat, _ = dg.check(None)
         lats[(order, mmp)] = lat

@@ -6,12 +6,17 @@ Paper: >85% depth reduction at <1% latency cost across (order x MM||).
 from benchmarks.common import emit, siren_paper_setup
 from repro.core.dataflow import map_to_dataflow
 from repro.core.fifo_opt import optimize_fifo_depths
+from repro.core.segment import build_segment_plan
 
 
 def run():
+    setups = {}                  # trace + plan once per order, sweep mm_parallel
     for order, mmp in ((1, 64), (1, 16), (2, 16)):
-        cfg, gfn, g, x = siren_paper_setup(order)
-        design = map_to_dataflow(g, block=64, mm_parallel=mmp)
+        if order not in setups:
+            _, _, g, _ = siren_paper_setup(order)
+            setups[order] = (g, build_segment_plan(g))
+        g, plan = setups[order]
+        design = map_to_dataflow(g, block=64, mm_parallel=mmp, plan=plan)
         res = optimize_fifo_depths(design, alpha=0.01)
         s = res.summary()
         emit(f"table4/order{order}_mm{mmp}/sum_depths_before",

@@ -1,8 +1,13 @@
 """End-to-end INR editing (paper Fig. 1B): encode an image as a SIREN,
-train an INSP-Net head to blur it IN WEIGHT SPACE, and execute the edited
-INR through the INR-Arch streaming pipeline.
+train an INSP-Net head to blur it IN WEIGHT SPACE, and serve the edited
+INR through the compiled INR-Arch streaming pipeline.
 
   PYTHONPATH=src python examples/inr_editing.py
+
+The gradient features are compiled ONCE (CompiledGradient front door,
+DESIGN.md §4): training streams the full coordinate grid through the
+compiled pipeline up front, and evaluation serves every pixel through the
+same cached artifact — no re-trace anywhere after step 2.
 """
 
 import jax
@@ -10,13 +15,15 @@ import jax.numpy as jnp
 
 from repro.configs.siren import InspConfig, SirenConfig
 from repro.core.dataflow import map_to_dataflow
-from repro.core.executor import (buffered_total_bytes, streaming_peak_bytes)
+from repro.core.executor import buffered_total_bytes, streaming_peak_bytes
 from repro.core.fifo_opt import optimize_fifo_depths
 from repro.core.passes import optimize
+from repro.core.segment import build_segment_plan
 from repro.core.trace import extract_graph
-from repro.inr.editing import gaussian_blur, train_insp_head, edited_inr
-from repro.inr.encode import (decode_inr, encode_inr, image_coords,
-                              synthetic_image)
+from repro.inr.editing import edited_inr, gaussian_blur, train_insp_head
+from repro.inr.encode import encode_inr, image_coords, synthetic_image
+from repro.inr.gradnet import compiled_feature_vector
+from repro.inr.siren import siren_fn
 
 RES = 32
 scfg = SirenConfig(hidden_features=128, hidden_layers=3)
@@ -29,7 +36,11 @@ print(f"   encode mse = {mse:.6f}")
 
 print("2) training INSP-Net head for Gaussian blur (weight-space edit) ...")
 target = gaussian_blur(img, 1.0)
-psi, emse = train_insp_head(scfg, icfg, params, target, steps=600, lr=2e-3)
+coords = image_coords(RES)
+_, cg = compiled_feature_vector(siren_fn(scfg, params), icfg.grad_order,
+                                coords, block=8)   # compiled ONCE, used twice
+psi, emse = train_insp_head(scfg, icfg, params, target, steps=600, lr=2e-3,
+                            compiled=cg)
 print(f"   edit-head mse = {emse:.6f}")
 
 print("3) compiling the edited INR with INR-Arch ...")
@@ -38,16 +49,19 @@ x = image_coords(RES)[: scfg.batch]
 graph = extract_graph(g_fn, x)
 n_raw = len(graph)
 optimize(graph)
-design = map_to_dataflow(graph, block=64, mm_parallel=16)
+plan = build_segment_plan(graph)           # ONE plan drives everything below
+design = map_to_dataflow(graph, block=64, mm_parallel=16, plan=plan)
 res = optimize_fifo_depths(design)
 print(f"   graph {n_raw} -> {len(graph)} nodes; "
       f"FIFO depths {res.sum_before} -> {res.sum_after}")
 eager = buffered_total_bytes(graph)
-stream = streaming_peak_bytes(graph, design, res.depths_after)
+stream = streaming_peak_bytes(graph, design, res.depths_after, plan=plan)
 print(f"   memory: eager {eager/1e6:.2f} MB vs dataflow {stream/1e6:.2f} MB "
       f"({eager/stream:.1f}x less)  [paper Table I: 1.7-8.9x]")
 
-print("4) evaluating the edited INR ...")
-out = g_fn(image_coords(RES)).reshape(RES, RES)
+print("4) serving the edited INR through the compiled gradient pipeline ...")
+served = edited_inr(scfg, icfg, params, psi, compiled=cg)
+out = served(coords).reshape(RES, RES)
 mae = float(jnp.abs(out - target).mean())
-print(f"   edited-vs-blurred MAE over all pixels: {mae:.4f}")
+print(f"   edited-vs-blurred MAE over all pixels: {mae:.4f} "
+      f"(served {coords.shape[0]} queries via apply_batched)")

@@ -2,55 +2,57 @@
 
   PYTHONPATH=src python examples/quickstart.py
 
-Takes a SIREN INR, builds its 2nd-order gradient graph, runs the paper's
-compiler (extract -> optimize -> dataflow -> deadlock/FIFO analysis ->
-codegen), and executes the generated streaming pipeline.
+The front door is ``repro.core.pipeline.compile_gradient``: ONE call takes a
+SIREN INR and a gradient order and runs the paper's whole compiler — extract
+the nth-order gradient graph (Sec. 3.2.2), optimize it, partition it into a
+SegmentPlan, precompute residents, emit code (Sec. 3.2.5) — returning a
+CompiledGradient artifact.  The FIFO-optimized dataflow analysis
+(Secs. 3.2.3-4) derives lazily from the same plan.  Compile once, then:
+repeat compilations are cache hits, and ``apply_batched`` streams any number
+of query points through the one jitted block pipeline (the serving path).
 """
+
+import time
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.siren import SirenConfig
-from repro.core import codegen
-from repro.core.dataflow import DataflowGraph, map_to_dataflow
-from repro.core.fifo_opt import optimize_fifo_depths
-from repro.core.passes import optimize
-from repro.core.trace import extract_graph
+from repro.core.pipeline import compile_cache_info, compile_gradient
 from repro.inr.gradnet import paper_gradients
 from repro.inr.siren import siren_fn, siren_init
 
-# 1. an INR (SIREN) and the gradient computation INSP-Net needs
+# 1. an INR (SIREN) and a batch of query coordinates
 cfg = SirenConfig()
 params = siren_init(cfg, jax.random.PRNGKey(0))
 f = siren_fn(cfg, params)
-grads_fn = paper_gradients(f, order=2, out_features=cfg.out_features,
-                           in_features=cfg.in_features)
 x = jax.random.uniform(jax.random.PRNGKey(1), (cfg.batch, cfg.in_features),
                        jnp.float32, -1, 1)
 
-# 2. extract + optimize the computation graph (paper Sec. 3.2.2)
-graph = extract_graph(grads_fn, x)
-record = []
-optimize(graph, record=record)
-for name, stats in record:
-    print(f"{name:26s} nodes={stats['nodes']:4d} edges={stats['edges']:4d} "
-          f"T={stats['T']} Permute={stats['Permute']}")
+# 2. compile once — the whole compiler behind one call
+t0 = time.perf_counter()
+cg = compile_gradient(f, order=2, example_coords=x)
+print(f"cold compile: {time.perf_counter() - t0:.2f}s — "
+      f"{len(cg.graph.nodes)} nodes, {len(cg.plan.segments)} segments, "
+      f"{len(cg.residents)} residents, "
+      f"{len(cg.source.splitlines())} lines of generated source")
 
-# 3. map to the dataflow architecture; deadlock + FIFO analysis (Sec. 3.2.3-4)
-design = map_to_dataflow(graph, block=64, mm_parallel=16)
-dg = DataflowGraph(design)
-deadlocked, latency, _ = dg.check({s: 2 for s in design.streams})
-print(f"\nall-FIFOs-depth-2 deadlocks: {deadlocked}")
-res = optimize_fifo_depths(design)
-print(f"FIFO depths: {res.sum_before} -> {res.sum_after} blocks "
-      f"({100 * (1 - res.sum_after / res.sum_before):.0f}% less memory, "
-      f"{100 * (res.latency_after / res.latency_before - 1):+.2f}% latency)")
+# ... and never again: the same request is a cache hit (same object)
+t0 = time.perf_counter()
+assert compile_gradient(f, order=2, example_coords=x) is cg
+print(f"cache hit: {(time.perf_counter() - t0) * 1e6:.0f}us "
+      f"({compile_cache_info()})")
 
-# 4. generate + run the streaming pipeline (Sec. 3.2.5)
-src = codegen.emit_python(graph, block=8, depths=res.depths_after)
-pipeline, _ = codegen.load_generated(src)
-outs = pipeline(codegen.graph_consts(graph), x)
-want = grads_fn(x)
+# 3. the dataflow side, from the same plan: deadlock-free FIFO sizing
+s = cg.dataflow_summary(dataflow_block=64, mm_parallel=16)
+print(f"FIFO depths: {s['sum_depths_before']} -> {s['sum_depths_after']} "
+      f"blocks ({100 * s['depth_reduction']:.0f}% less memory, "
+      f"{100 * s['latency_overhead']:+.2f}% latency)")
+
+# 4. serve: any batch size streams through the one jitted block pipeline
+q = jax.random.uniform(jax.random.PRNGKey(2), (1001, cfg.in_features),
+                       jnp.float32, -1, 1)            # not a block multiple
+outs = cg.apply_batched(q)
+want = paper_gradients(f, 2, cfg.out_features, cfg.in_features)(q)
 err = max(float(jnp.abs(a - b).max()) for a, b in zip(want, outs))
-print(f"\ngenerated pipeline max |err| vs direct JAX: {err:.2e}")
-print(f"generated source: {len(src.splitlines())} lines")
+print(f"served {q.shape[0]} queries; max |err| vs direct JAX: {err:.2e}")

@@ -10,7 +10,8 @@
   batch dim is split into blocks that flow segment-by-segment through the
   plan under ``lax.map``, each segment dispatching to its Pallas stream
   kernel (fused_chain / stream_matmul / siren_layer) or to the per-node
-  interpreter as a reference fallback.
+  interpreter as a reference fallback.  Since the CompiledGradient layer
+  (DESIGN.md §4) it is a thin wrapper: compile-or-hit, then apply.
 
 Both are built from the same IR, so they agree numerically (tests assert it).
 """
@@ -21,8 +22,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.graph import ComputeGraph, Node
-from repro.core.segment import (INTERPRET, SegmentPlan, build_segment_plan,
-                                classify_residents, segment_dispatch, _p)
+from repro.core.segment import (SegmentPlan, build_segment_plan,
+                                classify_residents, _p)
 
 
 def _eval_node(node: Node, args, block_b: int | None = None):
@@ -227,15 +228,24 @@ def _run_segment(plan: SegmentPlan, seg, kernel: str, env, res_env,
     return local[seg.output]
 
 
+# per-graph compile cache for the thin wrapper below: repeat calls with the
+# same (graph, plan, block, use_pallas) reuse the CompiledGradient artifact.
+# Keyed by object identity — mutating a graph after executing it through
+# this path is unsupported (go through core.pipeline.compile_from_graph).
+_GRAPH_CACHE: dict[tuple, object] = {}
+
+
 def streaming_executor(g: ComputeGraph, block: int = 8, *,
                        plan: SegmentPlan | None = None,
                        use_pallas: bool | None = None,
                        dispatch_log: list | None = None):
     """Returns f(*inputs) that executes the SegmentPlan as a block pipeline.
 
-    Residents are computed once; the batch dim is split into blocks and each
-    block flows through the plan's segments under ``lax.map`` (the dataflow
-    pipeline), so peak live memory ~ residents + one block working set.
+    Thin wrapper over the compile-once/run-many layer (DESIGN.md §4): the
+    graph is compiled into a ``core.pipeline.CompiledGradient`` — residents
+    precomputed once, one jitted block pipeline — or fetched from the
+    per-graph cache, and the artifact's ``apply`` is returned.  Peak live
+    memory ~ residents + one block working set, as before.
 
     ``use_pallas`` selects per-segment Pallas kernel dispatch (fused_chain /
     stream_matmul / siren_layer); the default enables it on TPU and falls
@@ -245,57 +255,18 @@ def streaming_executor(g: ComputeGraph, block: int = 8, *,
     ``(segment_id, kind, kernel)`` entry per segment — the plan-level record
     of what was dispatched.
     """
-    assert check_streamable(g), "graph is not batch-streamable"
-    if plan is None:
-        plan = build_segment_plan(g)
-    if use_pallas is None:
-        use_pallas = jax.default_backend() == "tpu"
-    decisions = {
-        s.id: (segment_dispatch(plan, s) if use_pallas else INTERPRET)
-        for s in plan.segments}
+    from repro.core.pipeline import _resolve_use_pallas, compile_from_graph
+
+    use_pallas = _resolve_use_pallas(use_pallas)
+    key = (g, id(plan) if plan is not None else None, block, use_pallas)
+    cg = _GRAPH_CACHE.get(key)
+    if cg is None:
+        cg = compile_from_graph(g, block=block, use_pallas=use_pallas,
+                                plan=plan, emit_source=False)
+        _GRAPH_CACHE[key] = cg
     if dispatch_log is not None:
-        dispatch_log.extend((s.id, s.kind, decisions[s.id])
-                            for s in plan.segments)
-
-    res_order = plan.resident_order()
-    input_nodes = [g.nodes[i] for i in plan.inputs]
-    # resident (const-derived) outputs never stream: they are returned from
-    # resident memory, exactly as map_to_dataflow models them (no FIFO)
-    streamed_outs = [o for o in g.outputs if o not in plan.resident]
-    B = plan.batch
-    block = min(block, B)
-    assert B % block == 0, (B, block)
-    n_blocks = B // block
-
-    def f(*inputs):
-        # phase 1: residents (weights, transposed weights, const broadcasts)
-        res_env: dict[int, jax.Array] = {}
-        for nid in res_order:
-            n = g.nodes[nid]
-            if n.op == "Const":
-                res_env[nid] = jnp.asarray(n.const)
-            else:
-                res_env[nid] = _eval_node(n, [res_env[i] for i in n.inputs])
-
-        # phase 2: stream blocks through the segments (plan topo order)
-        def block_fn(xblk):
-            env: dict[int, jax.Array] = {
-                n.id: xblk[_p(n, "idx")] for n in input_nodes}
-            for seg in plan.segments:
-                env[seg.output] = _run_segment(plan, seg, decisions[seg.id],
-                                               env, res_env, block, B)
-            return tuple(env[o] for o in streamed_outs)
-
-        if streamed_outs:
-            xblocks = tuple(x.reshape(n_blocks, block, *x.shape[1:])
-                            for x in inputs)
-            outs = jax.lax.map(block_fn, xblocks)
-            streamed_vals = iter(o.reshape(B, *o.shape[2:]) for o in outs)
-        else:
-            streamed_vals = iter(())
-        return tuple(res_env[o] if o in plan.resident else next(streamed_vals)
-                     for o in g.outputs)
-    return f
+        dispatch_log.extend(cg.dispatch)
+    return cg.apply
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,323 @@
+"""CompiledGradient — the compile-once / run-many front door (DESIGN.md §4).
+
+INR-Arch's compiler is an end-to-end ARTIFACT pipeline (paper Secs.
+3.2.1-3.2.5): extract the nth-order gradient graph, optimize it, partition it
+into stream-kernel segments, size the FIFOs, and emit code ONCE — then stream
+many queries through the result.  This module is that front door:
+
+    compile_gradient(fn, order, example_coords) -> CompiledGradient
+
+The artifact carries everything every downstream layer needs — the optimized
+ComputeGraph, the SegmentPlan, the precomputed residents (weights and
+const-derived tensors, the paper's on-chip memory), the static Pallas
+dispatch table, the emitted codegen source, and the FIFO-optimized dataflow
+summary — plus two execution entry points:
+
+  * ``apply(*inputs)``        — the classic plan-batch streaming execution
+                                (what ``streaming_executor`` returns);
+  * ``apply_batched(coords)`` — the SERVING path: pads an arbitrary number of
+                                query rows to a block multiple and streams
+                                them through the one jitted block pipeline.
+
+Repeat compilations are cache hits: an in-process cache keyed by
+``(fn identity, order, coord shape/dtype, block, use_pallas)`` returns the
+SAME artifact object with no re-trace — the amortization PatchINR argues for
+in scalable INR inference, and what a heavy-traffic serving path requires.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import codegen
+from repro.core.executor import _eval_node, _run_segment, check_streamable
+from repro.core.graph import ComputeGraph
+from repro.core.segment import (SegmentPlan, build_segment_plan,
+                                dispatch_table, INTERPRET, _p)
+
+# blocks per chunk of the serving path: full chunks run through one jitted
+# lax.map, the remainder runs block-by-block — exactly two traces, ever
+CHUNK_BLOCKS = 64
+
+
+class CompiledGradient:
+    """Frozen compile-once / run-many pipeline artifact.
+
+    Treat instances as immutable: they are shared via the compile cache, so
+    mutating one corrupts every holder.  All fields are set at compile time
+    except the dataflow summary, which is computed lazily (the FIFO-depth
+    search can take minutes on large graphs) and then cached on the artifact.
+    """
+
+    def __init__(self, graph: ComputeGraph, plan: SegmentPlan, *, block: int,
+                 use_pallas: bool, residents: dict, dispatch: list,
+                 source: str | None, fn=None, order: int | None = None):
+        self.graph = graph
+        self.plan = plan
+        self.block = block
+        self.use_pallas = use_pallas
+        self.residents = residents        # node id -> concrete jax.Array
+        self.dispatch = dispatch          # [(segment id, kind, kernel)]
+        self.source = source              # emitted Python module (codegen)
+        self.fn = fn                      # original INR fn (None via graph path)
+        self.order = order
+        self._dataflow = None
+        self._decisions = {sid: kernel for sid, _, kernel in dispatch}
+        self._streamed_outs = [o for o in graph.outputs
+                               if o not in plan.resident]
+        # the one jitted block pipeline (serving granule) ...
+        self._block_apply = jax.jit(self._make_block_fn())
+        # ... its chunked form (lax.map over CHUNK_BLOCKS blocks) ...
+        self._chunk_apply = jax.jit(self._make_chunk_fn())
+        # ... and the classic full-plan-batch streaming execution
+        self.apply = jax.jit(self._make_apply())
+
+    # -- execution ---------------------------------------------------------
+
+    def _make_block_fn(self):
+        plan, g = self.plan, self.graph
+        decisions, res_env = self._decisions, self.residents
+        block, B = self.block, plan.batch
+        input_nodes = [g.nodes[i] for i in plan.inputs]
+        streamed_outs = self._streamed_outs
+
+        def block_fn(*xblk):
+            env = {n.id: xblk[_p(n, "idx")] for n in input_nodes}
+            for seg in plan.segments:
+                env[seg.output] = _run_segment(plan, seg, decisions[seg.id],
+                                               env, res_env, block, B)
+            return tuple(env[o] for o in streamed_outs)
+        return block_fn
+
+    def _make_chunk_fn(self):
+        block_fn = self._make_block_fn()
+
+        def chunk_fn(xchunk):              # [n_blocks, block, ...features]
+            return jax.lax.map(lambda b: block_fn(b), xchunk)
+        return chunk_fn
+
+    def _make_apply(self):
+        plan, g = self.plan, self.graph
+        res_env, block = self.residents, self.block
+        B = plan.batch
+        n_blocks = B // block
+        block_fn = self._make_block_fn()
+        streamed_outs = self._streamed_outs
+
+        def apply(*inputs):
+            if streamed_outs:
+                xb = tuple(x.reshape(n_blocks, block, *x.shape[1:])
+                           for x in inputs)
+                outs = jax.lax.map(lambda b: block_fn(*b), xb)
+                vals = iter(o.reshape(B, *o.shape[2:]) for o in outs)
+            else:
+                vals = iter(())
+            return tuple(res_env[o] if o in plan.resident else next(vals)
+                         for o in g.outputs)
+        return apply
+
+    def apply_batched(self, coords, *, chunk_blocks: int = CHUNK_BLOCKS):
+        """Serve an arbitrary number of query rows through the compiled
+        pipeline.
+
+        ``coords`` is [N, ...features] for any N: the batch is padded to a
+        block multiple (edge rows replicated — padding never reaches the
+        caller), full chunks of ``chunk_blocks`` blocks stream through one
+        jitted ``lax.map``, remainder blocks through the jitted per-block
+        pipeline, and the first N rows of each output are returned.  Only two
+        traces ever compile, no matter how many batch sizes are served.
+        """
+        if len(self.plan.inputs) != 1:
+            raise ValueError("apply_batched serves single-input (coordinate) "
+                             "pipelines; use apply() for multi-input graphs")
+        coords = jnp.asarray(coords)
+        n = coords.shape[0]
+        block = self.block
+        if n == 0:
+            return tuple(
+                self._resident_output(o, 0) if o in self.plan.resident
+                else jnp.zeros((0,) + tuple(self.graph.nodes[o].shape[1:]),
+                               self.graph.nodes[o].dtype)
+                for o in self.graph.outputs)
+        pad = (-n) % block
+        if pad:
+            edge = jnp.broadcast_to(coords[-1:], (pad,) + coords.shape[1:])
+            coords = jnp.concatenate([coords, edge])
+        nb = coords.shape[0] // block
+        n_chunks = nb // chunk_blocks
+
+        pieces: list[tuple] = []
+        if n_chunks:
+            head = coords[: n_chunks * chunk_blocks * block]
+            xc = head.reshape(n_chunks, chunk_blocks, block,
+                              *coords.shape[1:])
+            for c in range(n_chunks):
+                outs = self._chunk_apply(xc[c])     # each [chunk, block, ...]
+                pieces.append(tuple(
+                    o.reshape(chunk_blocks * block, *o.shape[2:])
+                    for o in outs))
+        for i in range(n_chunks * chunk_blocks, nb):
+            pieces.append(self._block_apply(coords[i * block:(i + 1) * block]))
+
+        streamed = iter(jnp.concatenate(col)[:n] if len(col) > 1
+                        else col[0][:n] for col in zip(*pieces))
+        return tuple(self._resident_output(o, n) if o in self.plan.resident
+                     else next(streamed) for o in self.graph.outputs)
+
+    def _resident_output(self, o: int, n: int):
+        v = self.residents[o]
+        if (o in self.plan.rowconst and v.ndim
+                and v.shape[:1] == (self.plan.batch,)):
+            # row-constant resident output: one row serves any batch size
+            v = jnp.broadcast_to(v[:1], (n,) + v.shape[1:])
+        return v
+
+    # -- the rest of the artifact ------------------------------------------
+
+    def dataflow_summary(self, *, dataflow_block: int = 64,
+                         mm_parallel: int = 16) -> dict:
+        """FIFO-optimized dataflow summary for this plan (lazy; the FIFO
+        search is the expensive part of the paper's compiler).  Computed once
+        with the first call's parameters, then cached on the artifact."""
+        if self._dataflow is None:
+            from repro.core.dataflow import map_to_dataflow
+            from repro.core.fifo_opt import optimize_fifo_depths
+            design = map_to_dataflow(self.graph, block=dataflow_block,
+                                     mm_parallel=mm_parallel, plan=self.plan)
+            res = optimize_fifo_depths(design)
+            self._dataflow = {"design": design, "fifo": res, **res.summary()}
+        return self._dataflow
+
+    def describe(self) -> str:
+        kernels = [k for _, _, k in self.dispatch if k != INTERPRET]
+        lines = [f"CompiledGradient(order={self.order}, block={self.block}, "
+                 f"use_pallas={self.use_pallas}): "
+                 f"{len(self.graph.nodes)} nodes, "
+                 f"{len(self.plan.segments)} segments, "
+                 f"{len(self.residents)} residents, "
+                 f"{len(kernels)} Pallas-dispatched segments",
+                 self.plan.describe()]
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# compilation
+# ---------------------------------------------------------------------------
+
+def _resolve_use_pallas(use_pallas: bool | None) -> bool:
+    if use_pallas is None:
+        return jax.default_backend() == "tpu"
+    return bool(use_pallas)
+
+
+def compile_from_graph(g: ComputeGraph, *, block: int = 8,
+                       use_pallas: bool | None = None,
+                       plan: SegmentPlan | None = None,
+                       emit_source: bool = True,
+                       fn=None, order: int | None = None) -> CompiledGradient:
+    """Compile an already-extracted, optimized ComputeGraph into a
+    CompiledGradient.  The plan is built once (or taken as given) and drives
+    the executor, the emitted source, and the lazy dataflow summary alike —
+    nothing downstream re-derives it."""
+    assert check_streamable(g), "graph is not batch-streamable"
+    if plan is None:
+        plan = build_segment_plan(g)
+    use_pallas = _resolve_use_pallas(use_pallas)
+    B = plan.batch
+    block = min(block, B)
+    if B % block != 0:
+        raise ValueError(f"plan batch {B} is not a multiple of block {block}")
+
+    dispatch = (dispatch_table(plan) if use_pallas
+                else [(s.id, s.kind, INTERPRET) for s in plan.segments])
+
+    # precompute residents once: the paper's on-chip tensors, never re-derived
+    residents: dict[int, jax.Array] = {}
+    for nid in plan.resident_order():
+        n = g.nodes[nid]
+        if n.op == "Const":
+            residents[nid] = jnp.asarray(n.const)
+        else:
+            residents[nid] = _eval_node(n, [residents[i] for i in n.inputs])
+
+    source = (codegen.emit_python(g, block=block, plan=plan)
+              if emit_source else None)
+    return CompiledGradient(g, plan, block=block, use_pallas=use_pallas,
+                            residents=residents, dispatch=dispatch,
+                            source=source, fn=fn, order=order)
+
+
+# ---------------------------------------------------------------------------
+# the compile cache (compile once, serve many)
+# ---------------------------------------------------------------------------
+
+_CACHE: dict[tuple, CompiledGradient] = {}
+_STATS = {"hits": 0, "misses": 0}
+
+
+def _fn_key(fn):
+    """fn identity: the object itself when hashable (functions hash by
+    identity), else id() — the cached artifact keeps fn alive either way."""
+    try:
+        hash(fn)
+        return fn
+    except TypeError:
+        return id(fn)
+
+
+def compile_cache_info() -> dict:
+    return {"hits": _STATS["hits"], "misses": _STATS["misses"],
+            "size": len(_CACHE)}
+
+
+def clear_compile_cache() -> None:
+    """Drop every cached artifact: the compile_gradient cache AND the
+    per-graph cache behind executor.streaming_executor."""
+    from repro.core import executor
+    _CACHE.clear()
+    _STATS["hits"] = _STATS["misses"] = 0
+    executor._GRAPH_CACHE.clear()
+
+
+def compile_gradient(fn, order: int, example_coords, *, block: int = 8,
+                     use_pallas: bool | None = None) -> CompiledGradient:
+    """The pipeline front door: compile-or-hit the full INR-Arch compiler for
+    the ``order``-th gradient computation of INR ``fn``.
+
+    ``example_coords`` only contributes shape and dtype (a concrete array or
+    a ``jax.ShapeDtypeStruct`` both work); its batch dim is rounded up to a
+    block multiple for the trace (``apply`` expects that rounded batch;
+    ``apply_batched`` serves any N regardless).  Repeat calls with the same
+    (fn identity, order, coord shape/dtype, block, use_pallas) return the
+    SAME artifact — no re-trace, no re-optimize, no re-plan.
+    """
+    use_pallas = _resolve_use_pallas(use_pallas)
+    shape = tuple(example_coords.shape)
+    dtype = str(jnp.dtype(example_coords.dtype))
+    # key on the block-rounded TRACE batch, so every shape that compiles to
+    # the same artifact shares one cache entry
+    trace_b = shape[0] + (-shape[0]) % block
+    key = (_fn_key(fn), int(order), (trace_b,) + shape[1:], dtype,
+           int(block), use_pallas)
+    hit = _CACHE.get(key)
+    if hit is not None:
+        _STATS["hits"] += 1
+        return hit
+    _STATS["misses"] += 1
+
+    # gradnet lives one layer up; import lazily to keep core's import DAG flat
+    from repro.core.passes import optimize
+    from repro.core.trace import extract_graph
+    from repro.inr.gradnet import paper_gradients
+
+    abstract = jax.ShapeDtypeStruct((trace_b,) + shape[1:], dtype)
+    out = jax.eval_shape(fn, abstract)
+    gfn = paper_gradients(fn, order, out_features=out.shape[-1],
+                          in_features=shape[-1])
+    g = extract_graph(gfn, abstract)
+    optimize(g)
+    cg = compile_from_graph(g, block=block, use_pallas=use_pallas,
+                            fn=fn, order=order)
+    _CACHE[key] = cg
+    return cg

@@ -14,7 +14,8 @@ import jax.numpy as jnp
 import repro.optim.adam as A
 from repro.configs.siren import InspConfig, SirenConfig
 from repro.inr.encode import image_coords
-from repro.inr.gradnet import feature_vector, num_features
+from repro.inr.gradnet import (compiled_feature_vector, feature_vector,
+                               num_features)
 from repro.inr.insp import insp_apply, insp_init
 from repro.inr.siren import siren_fn
 
@@ -35,21 +36,34 @@ def sharpen(img, amount: float = 1.0):
 
 def train_insp_head(siren_cfg: SirenConfig, insp_cfg: InspConfig,
                     siren_params, target_img, *, steps: int = 300,
-                    lr: float = 1e-3, batch: int = 512, key=None):
-    """Fit psi so INSP(features(x)) ~= target_img(x).  Returns (psi, mse)."""
+                    lr: float = 1e-3, batch: int = 512, key=None,
+                    block: int = 8, compiled=None):
+    """Fit psi so INSP(features(x)) ~= target_img(x).  Returns (psi, mse).
+
+    The gradient features of the (frozen) SIREN are what INR-Arch
+    accelerates: they are compiled ONCE via the CompiledGradient front door
+    (or taken as the given ``compiled`` artifact) and streamed over the full
+    coordinate grid up front — training then indexes the cached feature
+    matrix instead of re-deriving gradients every step (the compile-once /
+    run-many serving discipline)."""
     key = key if key is not None else jax.random.PRNGKey(0)
     res = target_img.shape[0]
     coords = image_coords(res)
     target = target_img.reshape(-1, 1)
 
     f = siren_fn(siren_cfg, siren_params)
-    feats = feature_vector(f, insp_cfg.grad_order)
+    if compiled is None:
+        feats_fn, compiled = compiled_feature_vector(
+            f, insp_cfg.grad_order, coords, block=block)
+    else:
+        feats_fn = feature_vector(f, insp_cfg.grad_order, compiled=compiled)
+    feats = feats_fn(coords)                 # one streamed pass, all pixels
     nf = num_features(siren_cfg.in_features, siren_cfg.out_features,
                       insp_cfg.grad_order)
     psi = insp_init(insp_cfg, nf, siren_cfg.out_features, key)
 
     def loss_fn(p, idx):
-        pred = insp_apply(p, feats(coords[idx]))
+        pred = insp_apply(p, feats[idx])
         return jnp.mean((pred - target[idx]) ** 2)
 
     ocfg = A.AdamWConfig(lr=lr, weight_decay=0.0, clip_norm=0.0,
@@ -70,11 +84,18 @@ def train_insp_head(siren_cfg: SirenConfig, insp_cfg: InspConfig,
     return psi, float(loss)
 
 
-def edited_inr(siren_cfg: SirenConfig, insp_cfg: InspConfig, siren_params, psi):
+def edited_inr(siren_cfg: SirenConfig, insp_cfg: InspConfig, siren_params,
+               psi, *, compiled=None):
     """The composite 'edited' INR g(x) = INSP(features_f(x)) — the function
-    whose computation graph INR-Arch compiles to hardware."""
+    whose computation graph INR-Arch compiles to hardware.
+
+    Without ``compiled`` the returned g is pure math (jacrev features) and
+    is what ``extract_graph`` should trace.  With ``compiled`` (a
+    CompiledGradient for f's gradients, e.g. from ``train_insp_head``'s
+    compile or ``compiled_feature_vector``), g SERVES through the compiled
+    streaming pipeline — any batch size, no per-call re-derivation."""
     f = siren_fn(siren_cfg, siren_params)
-    feats = feature_vector(f, insp_cfg.grad_order)
+    feats = feature_vector(f, insp_cfg.grad_order, compiled=compiled)
 
     def g(x):
         return insp_apply(psi, feats(x))

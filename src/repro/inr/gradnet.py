@@ -30,15 +30,44 @@ def batched_gradients(f, order: int):
     return jax.vmap(g)
 
 
-def feature_vector(f, order: int):
+def feature_vector(f, order: int, *, compiled=None):
     """x [B, in] -> concatenated flat feature matrix [B, F] where
-    F = out * (1 + in + in^2 + ... + in^order)."""
+    F = out * (1 + in + in^2 + ... + in^order).
+
+    With ``compiled`` (a ``core.pipeline.CompiledGradient`` for ``f`` at this
+    order), features come from the compiled streaming pipeline's serving path
+    (``apply_batched``) — gradients are never re-derived per call, and any
+    batch size streams through the one jitted block pipeline.  Without it,
+    falls back to direct vmap'd jacrev (the uncompiled path).  Column order
+    is identical either way: order-k entries are laid out (channel, i1..ik)
+    row-major."""
+    if compiled is not None:
+        if compiled.order is not None and compiled.order != order:
+            raise ValueError(f"compiled artifact is for order "
+                             f"{compiled.order}, requested {order}")
+        def feats(x):
+            outs = compiled.apply_batched(x)
+            return jnp.concatenate([o.reshape(x.shape[0], -1)
+                                    for o in outs], -1)
+        return feats
+
     bg = batched_gradients(f, order)
 
     def feats(x):
         outs = bg(x)
         return jnp.concatenate([o.reshape(x.shape[0], -1) for o in outs], -1)
     return feats
+
+
+def compiled_feature_vector(f, order: int, example_coords, *, block: int = 8,
+                            use_pallas: bool | None = None):
+    """Compile-or-hit the gradient pipeline for ``f`` and return
+    ``(feats_fn, CompiledGradient)`` — the serving-path feature extractor."""
+    from repro.core.pipeline import compile_gradient
+
+    cg = compile_gradient(f, order, example_coords, block=block,
+                          use_pallas=use_pallas)
+    return feature_vector(f, order, compiled=cg), cg
 
 
 def num_features(in_features: int, out_features: int, order: int) -> int:
