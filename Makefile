@@ -2,7 +2,7 @@
 
 PY ?= python
 
-.PHONY: test test-fast bench bench-segments bench-pipeline
+.PHONY: test test-fast bench bench-segments bench-pipeline bench-autotune bench-json
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -18,3 +18,9 @@ bench-segments:
 
 bench-pipeline:
 	PYTHONPATH=src $(PY) -m benchmarks.run pipeline
+
+bench-autotune:
+	PYTHONPATH=src $(PY) -m benchmarks.run autotune
+
+bench-json:
+	PYTHONPATH=src $(PY) -m benchmarks.run --json

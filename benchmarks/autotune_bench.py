@@ -1,0 +1,75 @@
+"""Autoconfig vs default config: predicted AND measured latency, orders 1-3.
+
+The acceptance surface of the autoconfig layer (DESIGN.md §5): for each
+gradient order, compile the SIREN pipeline twice — once with the default
+HardwareConfig, once with ``config="auto"`` — and report, side by side,
+
+  * the dataflow latency oracle's prediction for both configs (block-step
+    longest path and granularity-invariant row-cycles), and
+  * the measured ``apply_batched`` wall time for both artifacts,
+
+plus the resolved config itself (in the JSON record via ``--json``).  The
+auto config is verified numerically identical to the default before timing.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.configs.siren import SirenConfig
+from repro.core import pipeline as P
+from repro.core.autoconfig import predicted_latency
+from repro.inr.siren import siren_fn, siren_init
+
+
+def run(hidden: int = 32, layers: int = 2, n_queries: int = 512):
+    cfg = SirenConfig(hidden_features=hidden, hidden_layers=layers)
+    params = siren_init(cfg, jax.random.PRNGKey(0))
+    f = siren_fn(cfg, params)
+    x = jax.random.uniform(jax.random.PRNGKey(1),
+                           (cfg.batch, cfg.in_features), jnp.float32, -1, 1)
+    q = jax.random.uniform(jax.random.PRNGKey(2),
+                           (n_queries, cfg.in_features), jnp.float32, -1, 1)
+
+    for order in (1, 2, 3):
+        P.clear_compile_cache()
+        default = P.compile_gradient(f, order, x)
+        auto = P.compile_gradient(f, order, x, config="auto")
+        res = auto.autoconfig
+
+        # numeric parity gate before any timing is reported
+        for a, b in zip(default.apply_batched(q), auto.apply_batched(q)):
+            np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+        lat_default = predicted_latency(default.graph, default.config,
+                                        plan=default.plan)
+        rc_default = lat_default * default.config.dataflow_block
+        emit(f"autotune/order{order}/predicted_default_row_cycles",
+             rc_default,
+             f"latency_steps={lat_default} config=default",
+             config=default.config.as_dict(), latency_steps=lat_default)
+        emit(f"autotune/order{order}/predicted_auto_row_cycles",
+             res.predicted_row_cycles,
+             f"latency_steps={res.predicted_latency} "
+             f"gain={rc_default / max(res.predicted_row_cycles, 1):.2f}x "
+             f"candidates={res.evaluated} rejected={res.rejected}",
+             config=auto.config.as_dict(),
+             latency_steps=res.predicted_latency,
+             candidates=res.evaluated, rejected=res.rejected)
+
+        us_default = time_fn(lambda: default.apply_batched(q))
+        emit(f"autotune/order{order}/measured_default_us", us_default,
+             f"per_query={us_default / n_queries:.2f}us "
+             f"block={default.config.block}",
+             config=default.config.as_dict())
+        us_auto = time_fn(lambda: auto.apply_batched(q))
+        emit(f"autotune/order{order}/measured_auto_us", us_auto,
+             f"per_query={us_auto / n_queries:.2f}us "
+             f"block={auto.config.block} "
+             f"vs_default={us_default / max(us_auto, 1e-9):.2f}x",
+             config=auto.config.as_dict())
+
+
+if __name__ == "__main__":
+    run()

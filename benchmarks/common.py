@@ -7,6 +7,10 @@ import time
 import jax
 import jax.numpy as jnp
 
+# machine-readable record sink: every emit() appends here; benchmarks.run
+# drains it per benchmark into results/<name>.json when --json is given
+RESULTS: list[dict] = []
+
 
 def time_fn(fn, *args, warmup: int = 2, iters: int = 10) -> float:
     """Median wall time (us per call) of a jitted callable."""
@@ -23,8 +27,20 @@ def time_fn(fn, *args, warmup: int = 2, iters: int = 10) -> float:
     return times[len(times) // 2] * 1e6
 
 
-def emit(name: str, us: float, derived: str = ""):
+def emit(name: str, us: float, derived: str = "", **extra):
+    """Print one CSV line AND record it for the JSON sink.  ``extra`` fields
+    (config dicts, latency/memory numbers) go to the JSON record only."""
     print(f"{name},{us:.1f},{derived}", flush=True)
+    rec = {"name": name, "us_per_call": float(us), "derived": derived}
+    if extra:
+        rec.update(extra)
+    RESULTS.append(rec)
+
+
+def drain_results() -> list[dict]:
+    out = list(RESULTS)
+    RESULTS.clear()
+    return out
 
 
 def siren_paper_setup(order: int, hidden: int = 256, layers: int = 3):

@@ -2,14 +2,24 @@
 
 Prints ``name,us_per_call,derived`` CSV lines.
 
-  PYTHONPATH=src python -m benchmarks.run [table1 table2 ... roofline kernels]
+  PYTHONPATH=src python -m benchmarks.run [table1 table2 ... autotune] [--json]
+
+With ``--json``, each benchmark additionally writes a machine-readable
+record to ``results/<name>.json``: every emitted row (plus any structured
+extras — resolved HardwareConfig dicts, predicted latencies, memory bytes)
+wrapped with the backend and timestamp, for CI trending and regression
+tracking.
 """
 
+import json
+import pathlib
 import sys
+import time
 
-from benchmarks import (higher_order, kernels_bench, pipeline_bench,
-                        roofline, segments_bench, table1_latency,
-                        table2_parallelism, table3_graphopt, table4_fifo)
+from benchmarks import (autotune_bench, common, higher_order, kernels_bench,
+                        pipeline_bench, roofline, segments_bench,
+                        table1_latency, table2_parallelism, table3_graphopt,
+                        table4_fifo)
 
 ALL = {
     "table1": table1_latency.run,
@@ -20,16 +30,50 @@ ALL = {
     "kernels": kernels_bench.run,
     "segments": segments_bench.run,
     "pipeline": pipeline_bench.run,
+    "autotune": autotune_bench.run,
     "higher_order": higher_order.run,       # opt-in: ~3 min FIFO search
 }
 DEFAULT = [n for n in ALL if n != "higher_order"]
 
+RESULTS_DIR = pathlib.Path(__file__).resolve().parent.parent / "results"
+
+
+def write_json(name: str, records: list[dict]) -> pathlib.Path:
+    import jax
+
+    RESULTS_DIR.mkdir(exist_ok=True)
+    path = RESULTS_DIR / f"{name}.json"
+    payload = {
+        "benchmark": name,
+        "backend": jax.default_backend(),
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+        "results": records,
+    }
+    path.write_text(json.dumps(payload, indent=2, default=str) + "\n")
+    return path
+
 
 def main() -> None:
-    which = [a for a in sys.argv[1:] if not a.startswith("-")] or DEFAULT
+    args = sys.argv[1:]
+    flags = [a for a in args if a.startswith("-")]
+    names = [a for a in args if not a.startswith("-")]
+    bad_flags = [f for f in flags if f != "--json"]
+    bad_names = [n for n in names if n not in ALL]
+    if bad_flags or bad_names:
+        bad = " ".join(bad_flags + bad_names)
+        sys.exit(f"benchmarks.run: unknown argument(s): {bad}\n"
+                 f"usage: python -m benchmarks.run "
+                 f"[{' | '.join(ALL)}] [--json]")
+    as_json = "--json" in flags
+    which = names or DEFAULT
     print("name,us_per_call,derived")
     for name in which:
+        common.drain_results()
         ALL[name]()
+        records = common.drain_results()
+        if as_json:
+            path = write_json(name, records)
+            print(f"# wrote {path}", flush=True)
 
 
 if __name__ == '__main__':

@@ -34,7 +34,8 @@ def run():
         cg = P.compile_from_graph(g, block=8)
         us_stream = time_fn(cg.apply, x)
         emit(f"table1/order{order}/streaming_wall", us_stream,
-             f"speedup_vs_buffered={us_ref/us_stream:.2f}x")
+             f"speedup_vs_buffered={us_ref/us_stream:.2f}x",
+             config=cg.config.as_dict())
 
         pipe, _ = codegen.load_generated(cg.source)
         consts = codegen.graph_consts(g, cg.plan)
@@ -55,7 +56,9 @@ def run():
         emit(f"table1/order{order}/memory_packed_bytes", packed,
              f"liveness-packed baseline; ratio={packed/streamed:.2f}x")
         emit(f"table1/order{order}/memory_stream_bytes", streamed,
-             "residents + optimized FIFOs")
+             "residents + optimized FIFOs",
+             memory={"eager_bytes": eager, "packed_bytes": packed,
+                     "stream_bytes": streamed})
 
         emit(f"table1/order{order}/dataflow_latency_cycles", res.latency_after,
              f"modeled; mm_parallel={mm_parallel}")

@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.siren import InspConfig, SirenConfig
+from repro.core.config import HardwareConfig
 from repro.core.dataflow import map_to_dataflow
 from repro.core.executor import buffered_total_bytes, streaming_peak_bytes
 from repro.core.fifo_opt import optimize_fifo_depths
@@ -37,8 +38,10 @@ print(f"   encode mse = {mse:.6f}")
 print("2) training INSP-Net head for Gaussian blur (weight-space edit) ...")
 target = gaussian_blur(img, 1.0)
 coords = image_coords(RES)
+# one HardwareConfig threads every layer below (DESIGN.md §5)
+hw = HardwareConfig(block=8, dataflow_block=64, mm_parallel=16)
 _, cg = compiled_feature_vector(siren_fn(scfg, params), icfg.grad_order,
-                                coords, block=8)   # compiled ONCE, used twice
+                                coords, config=hw)  # compiled ONCE, used twice
 psi, emse = train_insp_head(scfg, icfg, params, target, steps=600, lr=2e-3,
                             compiled=cg)
 print(f"   edit-head mse = {emse:.6f}")
@@ -49,9 +52,9 @@ x = image_coords(RES)[: scfg.batch]
 graph = extract_graph(g_fn, x)
 n_raw = len(graph)
 optimize(graph)
-plan = build_segment_plan(graph)           # ONE plan drives everything below
-design = map_to_dataflow(graph, block=64, mm_parallel=16, plan=plan)
-res = optimize_fifo_depths(design)
+plan = build_segment_plan(graph, config=hw)   # ONE plan drives everything below
+design = map_to_dataflow(graph, plan=plan, config=hw)
+res = optimize_fifo_depths(design, config=hw)
 print(f"   graph {n_raw} -> {len(graph)} nodes; "
       f"FIFO depths {res.sum_before} -> {res.sum_after}")
 eager = buffered_total_bytes(graph)

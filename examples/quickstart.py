@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.siren import SirenConfig
+from repro.core.config import HardwareConfig
 from repro.core.pipeline import compile_cache_info, compile_gradient
 from repro.inr.gradnet import paper_gradients
 from repro.inr.siren import siren_fn, siren_init
@@ -43,11 +44,27 @@ assert compile_gradient(f, order=2, example_coords=x) is cg
 print(f"cache hit: {(time.perf_counter() - t0) * 1e6:.0f}us "
       f"({compile_cache_info()})")
 
-# 3. the dataflow side, from the same plan: deadlock-free FIFO sizing
-s = cg.dataflow_summary(dataflow_block=64, mm_parallel=16)
+# 3. the dataflow side, from the same plan: deadlock-free FIFO sizing.
+# Parameters come from the artifact's HardwareConfig (one object carries
+# block, dataflow granule, MM parallelism, serving chunk — see DESIGN.md §5)
+print(f"hardware config: {cg.config.describe()}")
+s = cg.dataflow_summary()
 print(f"FIFO depths: {s['sum_depths_before']} -> {s['sum_depths_after']} "
       f"blocks ({100 * s['depth_reduction']:.0f}% less memory, "
       f"{100 * s['latency_overhead']:+.2f}% latency)")
+
+# 3b. or let the compiler PICK the config (the paper's automatic
+# hardware-parameter configuration): config="auto" searches block and
+# per-MM-segment parallelism with the dataflow latency oracle.  Shown on a
+# smaller SIREN — every candidate costs a full dataflow-model evaluation,
+# so the search scales with graph size (~seconds here, minutes at hidden=256)
+small = SirenConfig(hidden_features=32, hidden_layers=2)
+fs = siren_fn(small, siren_init(small, jax.random.PRNGKey(0)))
+xs = x[:, : small.in_features]
+t0 = time.perf_counter()
+auto = compile_gradient(fs, order=2, example_coords=xs, config="auto")
+print(f"autoconfig ({time.perf_counter() - t0:.1f}s): "
+      f"{auto.autoconfig.describe()}")
 
 # 4. serve: any batch size streams through the one jitted block pipeline
 q = jax.random.uniform(jax.random.PRNGKey(2), (1001, cfg.in_features),

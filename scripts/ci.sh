@@ -1,8 +1,11 @@
 #!/usr/bin/env bash
 # Tier-1 CI: the suite must be reproducibly green from a clean checkout.
-# Two stages: a fast gate without the slow training tests surfaces quick
-# failures first, then the full suite (including @pytest.mark.slow) runs.
+# Three stages: the autoconfig smoke (compile config="auto", verify
+# deadlock-freedom + numeric parity) surfaces compiler-layer breakage in
+# seconds, then a fast gate without the slow training tests, then the full
+# suite (including @pytest.mark.slow).
 set -euo pipefail
 cd "$(dirname "$0")/.."
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m repro.core.autoconfig
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q -m "not slow" "$@"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

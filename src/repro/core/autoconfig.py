@@ -1,0 +1,314 @@
+"""Automatic hardware-parameter configuration (paper Sec. 3.2.3-4).
+
+INR-Arch's compiler "automatically configures hardware parameters such as
+latency and stream depths to optimize throughput, while ensuring
+deadlock-free operation".  This module is that step for the HardwareConfig
+space (DESIGN.md §5): ``resolve_config(graph, plan)`` searches
+
+  * the BLOCK granule — one value used for BOTH the execution pipeline and
+    the dataflow FIFO model (unifying the old block-8-vs-dataflow-block-64
+    split for auto-configured artifacts), and
+  * the PER-MM-SEGMENT parallelism — a fixed parallelism budget (the FPGA's
+    DSP pool; default = the base config's uniform allocation) redistributed
+    across the plan's MatMul / FusedMmAct segments,
+
+using the existing dataflow longest-path latency model (``DataflowGraph``)
+as the analytic cost oracle.  Candidates whose deadlock analysis flags a
+cycle under safe (naive full-stream) FIFO depths are REJECTED outright; the
+winner is re-verified deadlock-free before it is returned.  Latencies at
+different block granules are compared in ROW-CYCLES (block-steps x rows per
+block), which is granularity-invariant for the regular access patterns these
+kernels produce.
+
+The search is deterministic — greedy steepest-descent over a finite ladder —
+so a given graph always resolves to the same config, and the compile cache
+(keyed on the resolved config) stays coherent.
+
+An optional ``measure`` hook refines the analytic choice with on-device
+microbenchmark timings: given a callable ``config -> seconds``, the block
+candidates of the analytic winner are re-ranked by measured wall time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+from repro.core.config import DEFAULT_CONFIG, HardwareConfig
+from repro.core.dataflow import DataflowGraph, map_to_dataflow
+from repro.core.graph import ComputeGraph
+from repro.core.segment import (FUSED_MM_ACT, MATMUL, SegmentPlan,
+                                build_segment_plan)
+
+# parallelism ladder per MM segment (the paper sweeps 16 and 64) and block
+# granule candidates (must divide the plan batch)
+MM_LADDER = (8, 16, 32, 64)
+BLOCK_CANDIDATES = (8, 16, 32, 64)
+
+
+@dataclass(frozen=True)
+class Candidate:
+    """One scored point of the search space."""
+    block: int
+    mm_parallel: tuple[tuple[int, int], ...]   # (segment id, parallelism)
+    latency: int                               # oracle block-step latency
+    row_cycles: int                            # latency * block (comparable)
+    deadlocked: bool
+    accepted: bool
+
+
+@dataclass(frozen=True)
+class AutoConfigResult:
+    config: HardwareConfig          # the winner (resolved, deadlock-free)
+    predicted_latency: int          # oracle latency of the winner (block steps)
+    predicted_row_cycles: int       # granularity-invariant cost of the winner
+    baseline_latency: int           # oracle latency of the base config
+    baseline_row_cycles: int
+    mm_segments: tuple[int, ...]    # segment ids the allocation targeted
+    candidates: tuple[Candidate, ...]   # every scored point, in search order
+
+    @property
+    def evaluated(self) -> int:
+        return len(self.candidates)
+
+    @property
+    def rejected(self) -> int:
+        return sum(1 for c in self.candidates if c.deadlocked)
+
+    def describe(self) -> str:
+        gain = (self.baseline_row_cycles / self.predicted_row_cycles
+                if self.predicted_row_cycles else 1.0)
+        return (f"autoconfig: {self.config.describe()} | predicted "
+                f"{self.predicted_latency} steps ({self.predicted_row_cycles} "
+                f"row-cycles, {gain:.2f}x vs default) after "
+                f"{self.evaluated} candidates ({self.rejected} "
+                f"deadlock-rejected)")
+
+
+# ---------------------------------------------------------------------------
+# the analytic oracle
+# ---------------------------------------------------------------------------
+
+def _oracle(g: ComputeGraph, plan: SegmentPlan,
+            config: HardwareConfig) -> tuple[bool, int]:
+    """(deadlocked, longest-path latency) of the dataflow design for one
+    config.  Deadlock is checked under NAIVE SAFE DEPTHS (every FIFO holds
+    its whole stream) — a config that deadlocks even there has no workable
+    FIFO sizing and is rejected; the latency is the unconstrained longest
+    path, the paper's peak-performance estimate that FIFO optimization then
+    preserves to within alpha."""
+    design = map_to_dataflow(g, plan=plan, config=config,
+                             block=config.dataflow_block)
+    dg = DataflowGraph(design)
+    naive = {s: max(design.streams[s].n_blocks, 2) for s in design.streams}
+    dead, _, _ = dg.check(naive)
+    _, latency, _ = dg.check(None)
+    return dead, latency
+
+
+def predicted_latency(g: ComputeGraph, config: HardwareConfig, *,
+                      plan: SegmentPlan | None = None) -> int:
+    """Longest-path dataflow latency (block steps) of ``config`` for this
+    graph — the quantity autoconfig minimizes, exposed for benchmarks."""
+    if plan is None:
+        plan = build_segment_plan(g)
+    dead, lat = _oracle(g, plan, config)
+    if dead:
+        raise ValueError("config deadlocks under naive safe FIFO depths")
+    return lat
+
+
+def _mm_segment_ids(plan: SegmentPlan) -> tuple[int, ...]:
+    return tuple(s.id for s in plan.segments
+                 if s.kind in (MATMUL, FUSED_MM_ACT))
+
+
+# ---------------------------------------------------------------------------
+# the search
+# ---------------------------------------------------------------------------
+
+def resolve_config(g: ComputeGraph, plan: SegmentPlan | None = None,
+                   mode: str = "auto", *,
+                   base: HardwareConfig | None = None,
+                   mm_budget: int | None = None,
+                   block_candidates: tuple[int, ...] = BLOCK_CANDIDATES,
+                   mm_ladder: tuple[int, ...] = MM_LADDER,
+                   measure=None) -> AutoConfigResult:
+    """Pick the HardwareConfig for ``g`` with the dataflow latency oracle.
+
+    ``mode="auto"`` runs the search; ``mode="default"`` scores and returns
+    the base config unchanged (useful for baselines).  ``mm_budget`` is the
+    total parallelism pool shared by the MM segments — by default the base
+    config's uniform allocation (``base.mm_parallel`` x number of MM
+    segments), i.e. the same silicon redistributed to the critical path.
+    ``measure``, if given, is a callable ``HardwareConfig -> seconds`` used
+    to re-rank the analytic winner's block candidates by real timings.
+
+    The returned config always scores <= the base config on the oracle, and
+    is verified deadlock-free; every scored point is in ``.candidates``.
+    """
+    if plan is None:
+        plan = build_segment_plan(g)
+    base = (base if base is not None else DEFAULT_CONFIG).resolved()
+    batch = plan.batch or base.block
+    base = base.clamped(batch)
+    mm_segs = _mm_segment_ids(plan)
+    log: list[Candidate] = []
+    seen: dict[tuple, Candidate] = {}
+
+    def score(config: HardwareConfig) -> Candidate:
+        # memoized: the greedy ladder revisits configs (e.g. the winner is
+        # re-scored at acceptance); each unique point costs one oracle call
+        key = (config.dataflow_block, config.mm_parallel,
+               config.mm_parallel_per_segment)
+        c = seen.get(key)
+        if c is None:
+            dead, lat = _oracle(g, plan, config)
+            c = Candidate(block=config.dataflow_block,
+                          mm_parallel=config.mm_parallel_per_segment,
+                          latency=lat, row_cycles=lat * config.dataflow_block,
+                          deadlocked=dead, accepted=False)
+            seen[key] = c
+            log.append(c)
+        return c
+
+    base_cand = score(base)
+    if base_cand.deadlocked:
+        raise ValueError("base config deadlocks under naive safe FIFO "
+                         "depths; no baseline to improve on")
+
+    def finish(chosen: HardwareConfig) -> AutoConfigResult:
+        final = score(chosen)
+        assert not final.deadlocked, "chosen config must be deadlock-free"
+        log[log.index(final)] = dataclasses.replace(final, accepted=True)
+        return AutoConfigResult(
+            config=chosen, predicted_latency=final.latency,
+            predicted_row_cycles=final.row_cycles,
+            baseline_latency=base_cand.latency,
+            baseline_row_cycles=base_cand.row_cycles,
+            mm_segments=mm_segs, candidates=tuple(log))
+
+    if mode == "default" or not mm_segs:
+        return finish(base)
+    if mode != "auto":
+        raise ValueError(f"unknown autoconfig mode {mode!r}")
+
+    budget = mm_budget if mm_budget is not None \
+        else base.mm_parallel * len(mm_segs)
+    ladder = tuple(sorted(set(mm_ladder)))
+    blocks = tuple(b for b in sorted(set(block_candidates))
+                   if batch % b == 0) or (base.block,)
+
+    best = None                            # (row_cycles, block, config)
+    for blk in blocks:
+        found = _allocate_mm(base, blk, mm_segs, budget, ladder, score)
+        if found is None:
+            continue                       # every allocation deadlocked
+        cfg, cand = found
+        key = (cand.row_cycles, blk)
+        if best is None or key < (best[0], best[1]):
+            best = (cand.row_cycles, blk, cfg)
+
+    if best is None or best[0] > base_cand.row_cycles:
+        # the search never beats the baseline: keep the base config
+        chosen = base
+    else:
+        chosen = best[2]
+
+    if measure is not None and len(blocks) > 1:
+        # on-device refinement: same MM allocation, re-rank block granules
+        # by measured wall time.  Only deadlock-free variants are timed —
+        # the measure hook must never promote a config the deadlock
+        # analysis would reject (the chosen config itself is always a
+        # survivor, so the pool is never empty).
+        variants = [chosen.replace(block=b, dataflow_block=b)
+                    for b in blocks]
+        safe = [v for v in variants if not score(v).deadlocked]
+        if safe:
+            chosen = min(safe, key=lambda v: (measure(v), v.block))
+
+    return finish(chosen)
+
+
+def _allocate_mm(base: HardwareConfig, blk: int, mm_segs, budget: int,
+                 ladder, score):
+    """Greedy parallelism allocation at one block granule: start every MM
+    segment at the ladder floor, then repeatedly promote the segment whose
+    promotion most reduces the oracle latency, while the total stays within
+    budget.  Deadlocked candidates are rejected (never promoted into).
+    Deterministic: ties break toward the lowest segment id.  Returns
+    ``(config, candidate)`` for the final allocation, or None when even the
+    floor allocation deadlocks or exceeds the budget."""
+    floor = ladder[0]
+    alloc = {sid: floor for sid in mm_segs}
+    if floor * len(mm_segs) > budget:
+        return None
+
+    def to_config(a) -> HardwareConfig:
+        return base.replace(
+            block=blk, dataflow_block=blk,
+            mm_parallel_per_segment=tuple(sorted(a.items())))
+
+    cur = score(to_config(alloc))
+    if cur.deadlocked:
+        return None
+    while True:
+        best_step = None                   # (latency, sid, level, candidate)
+        for sid in mm_segs:
+            i = ladder.index(alloc[sid])
+            if i + 1 >= len(ladder):
+                continue
+            nxt = ladder[i + 1]
+            if sum(alloc.values()) - alloc[sid] + nxt > budget:
+                continue
+            trial = dict(alloc)
+            trial[sid] = nxt
+            cand = score(to_config(trial))
+            if cand.deadlocked:
+                continue                   # rejected by deadlock analysis
+            if cand.latency < cur.latency and (
+                    best_step is None or
+                    (cand.latency, sid) < (best_step[0], best_step[1])):
+                best_step = (cand.latency, sid, nxt, cand)
+        if best_step is None:
+            return to_config(alloc), cur
+        _, sid, nxt, cur = best_step
+        alloc[sid] = nxt
+
+
+# ---------------------------------------------------------------------------
+# CLI smoke (wired into scripts/ci.sh): resolve a tiny SIREN gradient
+# pipeline, verify deadlock-freedom and numeric parity with the default
+# config, and print one line
+# ---------------------------------------------------------------------------
+
+def _smoke() -> int:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs.siren import SirenConfig
+    from repro.core import pipeline as P
+    from repro.core.fifo_opt import optimize_fifo_depths
+    from repro.inr.siren import siren_fn, siren_init
+
+    cfg = SirenConfig(hidden_features=16, hidden_layers=1)
+    f = siren_fn(cfg, siren_init(cfg, jax.random.PRNGKey(0)))
+    x = jax.random.uniform(jax.random.PRNGKey(1), (16, cfg.in_features),
+                           jnp.float32, -1, 1)
+    auto = P.compile_gradient(f, 2, x, config="auto")
+    default = P.compile_gradient(f, 2, x)
+    for a, b in zip(auto.apply_batched(x), default.apply_batched(x)):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+    res = auto.autoconfig
+    fifo = optimize_fifo_depths(
+        map_to_dataflow(auto.graph, plan=auto.plan, config=auto.config),
+        config=auto.config)
+    assert res.predicted_row_cycles <= res.baseline_row_cycles
+    print(f"autoconfig smoke OK: {res.describe()}; fifo depths "
+          f"{fifo.sum_before} -> {fifo.sum_after}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(_smoke())

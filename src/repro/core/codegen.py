@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.core.config import HardwareConfig
 from repro.core.graph import ComputeGraph
 from repro.core.segment import (SegmentPlan, build_segment_plan,
                                 segment_dispatch, _p)
@@ -111,13 +112,21 @@ def _emit_segment(L, g: ComputeGraph, plan: SegmentPlan, seg, B: int):
     L.append("")
 
 
-def emit_python(g: ComputeGraph, *, block: int = 8, name: str = "generated",
+def emit_python(g: ComputeGraph, *, block: int | None = None,
+                name: str = "generated",
                 depths: dict | None = None,
-                plan: SegmentPlan | None = None) -> str:
+                plan: SegmentPlan | None = None,
+                config: HardwareConfig | None = None) -> str:
     """Emit a Python/JAX module implementing the optimized graph, one
-    function per SegmentPlan segment."""
+    function per SegmentPlan segment.  The emitted source records the
+    HardwareConfig it was compiled for (``HARDWARE_CONFIG``), the way the
+    paper's generated HLS bakes in its configured hardware parameters."""
     if plan is None:
-        plan = build_segment_plan(g)
+        plan = build_segment_plan(g, config=config)
+    if config is None:
+        config = plan.config
+    if block is None:
+        block = config.block if config is not None else 8
     order = g.topo_order()
     B = plan.batch
     consts = [nid for nid in order
@@ -127,6 +136,8 @@ def emit_python(g: ComputeGraph, *, block: int = 8, name: str = "generated",
     L.append(f'"""Auto-generated by repro.core.codegen — INR-Arch pipeline.')
     L.append(f'graph: {len(g.nodes)} nodes / {g.n_edges} edges;')
     L.append(f'plan: {len(plan.segments)} segments {plan.counts_by_kind()};')
+    if config is not None:
+        L.append(f'hardware config: {config.describe()}')
     if depths is not None:
         L.append(f'optimized FIFO sum-depth: {sum(depths.values())} blocks')
     L.append('"""')
@@ -135,6 +146,8 @@ def emit_python(g: ComputeGraph, *, block: int = 8, name: str = "generated",
     L.append("")
     L.append("BLOCK = %d" % block)
     L.append("BATCH = %d" % B)
+    if config is not None:
+        L.append(f"HARDWARE_CONFIG = {config.as_dict()!r}")
     L.append("")
     L.append("def _bshape(shape, ref):")
     L.append("    # rewrite static batch dim to the incoming block's batch")

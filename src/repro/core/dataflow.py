@@ -27,6 +27,7 @@ from __future__ import annotations
 import math
 from dataclasses import dataclass, field
 
+from repro.core.config import HardwareConfig
 from repro.core.graph import ComputeGraph, Node
 # op taxonomy lives with the SegmentPlan now; re-exported for compatibility
 from repro.core.segment import (BUFFERING, BUFFERING_OPS, FUSED_MM_ACT,
@@ -81,18 +82,35 @@ def _n_blocks(node: Node, block: int) -> int:
     return max(1, math.ceil(node.size / block))
 
 
-def map_to_dataflow(g: ComputeGraph, *, block: int = 64,
-                    mm_parallel: int = 64, dtype_bytes: int = 4,
-                    plan: SegmentPlan | None = None) -> DataflowDesign:
+def map_to_dataflow(g: ComputeGraph, *, block: int | None = None,
+                    mm_parallel: int | None = None, dtype_bytes: int = 4,
+                    plan: SegmentPlan | None = None,
+                    config: HardwareConfig | None = None) -> DataflowDesign:
     """Map a SegmentPlan onto the dataflow architecture.
 
     Processes and streams are derived from the SAME plan the executor runs
     and the codegen emits (DESIGN.md §3): one process per segment (a fused
     stream kernel), one array stream per inter-segment tensor USE, plus
     Input sources, copy_stream multicasters for fan-out, and output sinks.
-    Intra-segment tensors never touch a FIFO — they live in the kernel."""
+    Intra-segment tensors never touch a FIFO — they live in the kernel.
+
+    Hardware parameters resolve in precedence order: explicit ``block`` /
+    ``mm_parallel`` kwargs (a uniform override, what the table sweeps use) >
+    ``config`` (``dataflow_block`` and per-MM-segment parallelism) > the
+    parallelism stamped on the plan's segments > legacy defaults (64/64)."""
     if plan is None:
-        plan = build_segment_plan(g)
+        plan = build_segment_plan(g, config=config)
+    if config is None:
+        config = plan.config
+    if block is None:
+        block = config.dataflow_block if config is not None else 64
+
+    def seg_mm_parallel(seg) -> int:
+        if mm_parallel is not None:
+            return mm_parallel
+        if config is not None:
+            return config.mm_parallel_for(seg.id)
+        return seg.meta.get("mm_parallel") or 64
     streams: dict[int, Stream] = {}
     procs: list[Process] = []
     sid = 0
@@ -185,7 +203,7 @@ def map_to_dataflow(g: ComputeGraph, *, block: int = 64,
             mm = g.nodes[seg.meta.get("mm", seg.nodes[0])]
             lhs = g.nodes[mm.inputs[0]]
             kk = lhs.shape[-1] if lhs.shape else 1
-            ii = max(1, math.ceil(kk / mm_parallel))
+            ii = max(1, math.ceil(kk / seg_mm_parallel(seg)))
             for i in range(nb_out):
                 p.steps.append(Step(writes=tuple((s, i) for s in outs),
                                     delay=ii))

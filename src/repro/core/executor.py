@@ -191,7 +191,8 @@ def _run_segment(plan: SegmentPlan, seg, kernel: str, env, res_env,
     if kernel == "stream_matmul":
         from repro.kernels.stream_matmul import stream_matmul
         mm = g.nodes[seg.nodes[0]]
-        return stream_matmul(env[mm.inputs[0]], res_env[mm.inputs[1]])
+        return stream_matmul(env[mm.inputs[0]], res_env[mm.inputs[1]],
+                             mm_parallel=seg.meta.get("mm_parallel"))
 
     if kernel == "siren_layer":
         from repro.kernels.siren_layer import siren_layer
@@ -205,7 +206,8 @@ def _run_segment(plan: SegmentPlan, seg, kernel: str, env, res_env,
             b = res_env[seg.meta["bias"]]
             b = b[0] if b.ndim == 2 else b
         return siren_layer(x, w, b, w0=seg.meta["w0"],
-                           apply_sin=seg.meta["apply_sin"])
+                           apply_sin=seg.meta["apply_sin"],
+                           mm_parallel=seg.meta.get("mm_parallel"))
 
     if kernel == "fused_chain":
         from repro.kernels.fused_chain import fused_chain
@@ -229,16 +231,17 @@ def _run_segment(plan: SegmentPlan, seg, kernel: str, env, res_env,
 
 
 # per-graph compile cache for the thin wrapper below: repeat calls with the
-# same (graph, plan, block, use_pallas) reuse the CompiledGradient artifact.
+# same (graph, plan, HardwareConfig) reuse the CompiledGradient artifact.
 # Keyed by object identity — mutating a graph after executing it through
 # this path is unsupported (go through core.pipeline.compile_from_graph).
 _GRAPH_CACHE: dict[tuple, object] = {}
 
 
-def streaming_executor(g: ComputeGraph, block: int = 8, *,
+def streaming_executor(g: ComputeGraph, block: int | None = None, *,
                        plan: SegmentPlan | None = None,
                        use_pallas: bool | None = None,
-                       dispatch_log: list | None = None):
+                       dispatch_log: list | None = None,
+                       config=None):
     """Returns f(*inputs) that executes the SegmentPlan as a block pipeline.
 
     Thin wrapper over the compile-once/run-many layer (DESIGN.md §4): the
@@ -247,6 +250,8 @@ def streaming_executor(g: ComputeGraph, block: int = 8, *,
     per-graph cache, and the artifact's ``apply`` is returned.  Peak live
     memory ~ residents + one block working set, as before.
 
+    Hardware parameters come from ``config`` (a ``HardwareConfig``); the
+    ``block`` / ``use_pallas`` kwargs are conveniences folded into it.
     ``use_pallas`` selects per-segment Pallas kernel dispatch (fused_chain /
     stream_matmul / siren_layer); the default enables it on TPU and falls
     back to the per-node interpreter elsewhere (kernels themselves also run
@@ -255,14 +260,15 @@ def streaming_executor(g: ComputeGraph, block: int = 8, *,
     ``(segment_id, kind, kernel)`` entry per segment — the plan-level record
     of what was dispatched.
     """
-    from repro.core.pipeline import _resolve_use_pallas, compile_from_graph
+    from repro.core.config import as_hardware_config
+    from repro.core.pipeline import compile_from_graph
 
-    use_pallas = _resolve_use_pallas(use_pallas)
-    key = (g, id(plan) if plan is not None else None, block, use_pallas)
+    cfg = as_hardware_config(config, block=block,
+                             use_pallas=use_pallas).resolved()
+    key = (g, id(plan) if plan is not None else None, cfg)
     cg = _GRAPH_CACHE.get(key)
     if cg is None:
-        cg = compile_from_graph(g, block=block, use_pallas=use_pallas,
-                                plan=plan, emit_source=False)
+        cg = compile_from_graph(g, config=cfg, plan=plan, emit_source=False)
         _GRAPH_CACHE[key] = cg
     if dispatch_log is not None:
         dispatch_log.extend(cg.dispatch)

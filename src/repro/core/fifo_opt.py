@@ -22,6 +22,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 
+from repro.core.config import HardwareConfig
 from repro.core.dataflow import DataflowDesign, DataflowGraph
 
 
@@ -48,8 +49,13 @@ class FifoOptResult:
         }
 
 
-def optimize_fifo_depths(design: DataflowDesign, *, alpha: float = 0.01,
-                         min_depth: int = 2) -> FifoOptResult:
+def optimize_fifo_depths(design: DataflowDesign, *, alpha: float | None = None,
+                         min_depth: int = 2,
+                         config: HardwareConfig | None = None) -> FifoOptResult:
+    """``alpha`` (the latency-degradation budget) resolves: explicit kwarg >
+    ``config.fifo_alpha`` > the paper's 1%."""
+    if alpha is None:
+        alpha = config.fifo_alpha if config is not None else 0.01
     dg = DataflowGraph(design)
 
     # 1. peak performance (unconstrained = no WAR edges)

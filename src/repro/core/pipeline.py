@@ -2,16 +2,25 @@
 
 INR-Arch's compiler is an end-to-end ARTIFACT pipeline (paper Secs.
 3.2.1-3.2.5): extract the nth-order gradient graph, optimize it, partition it
-into stream-kernel segments, size the FIFOs, and emit code ONCE — then stream
-many queries through the result.  This module is that front door:
+into stream-kernel segments, configure the hardware parameters, size the
+FIFOs, and emit code ONCE — then stream many queries through the result.
+This module is that front door:
 
     compile_gradient(fn, order, example_coords) -> CompiledGradient
 
+Every hardware knob lives in one frozen ``HardwareConfig`` (DESIGN.md §5):
+block size, serving chunk, dataflow FIFO granule, per-segment MM parallelism,
+Pallas dispatch, FIFO alpha.  Pass ``config=HardwareConfig(...)`` to pin it,
+``config="auto"`` to let ``core.autoconfig`` pick it with the dataflow
+latency oracle (the paper's automatic hardware-parameter configuration), or
+nothing for the defaults.
+
 The artifact carries everything every downstream layer needs — the optimized
-ComputeGraph, the SegmentPlan, the precomputed residents (weights and
-const-derived tensors, the paper's on-chip memory), the static Pallas
-dispatch table, the emitted codegen source, and the FIFO-optimized dataflow
-summary — plus two execution entry points:
+ComputeGraph, the SegmentPlan (MM segments stamped with their parallelism),
+the precomputed residents (weights and const-derived tensors, the paper's
+on-chip memory), the static Pallas dispatch table, the emitted codegen source
+(which records the config), and the FIFO-optimized dataflow summary — plus
+two execution entry points:
 
   * ``apply(*inputs)``        — the classic plan-batch streaming execution
                                 (what ``streaming_executor`` returns);
@@ -20,9 +29,10 @@ summary — plus two execution entry points:
                                 them through the one jitted block pipeline.
 
 Repeat compilations are cache hits: an in-process cache keyed by
-``(fn identity, order, coord shape/dtype, block, use_pallas)`` returns the
-SAME artifact object with no re-trace — the amortization PatchINR argues for
-in scalable INR inference, and what a heavy-traffic serving path requires.
+``(fn identity, order, coord shape/dtype, resolved HardwareConfig)`` returns
+the SAME artifact object with no re-trace — the amortization PatchINR argues
+for in scalable INR inference, and what a heavy-traffic serving path
+requires.  Distinct configs are distinct artifacts.
 """
 
 from __future__ import annotations
@@ -31,54 +41,68 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import codegen
+from repro.core.config import (DEFAULT_CONFIG, HardwareConfig,
+                               as_hardware_config)
 from repro.core.executor import _eval_node, _run_segment, check_streamable
 from repro.core.graph import ComputeGraph
-from repro.core.segment import (SegmentPlan, build_segment_plan,
-                                dispatch_table, INTERPRET, _p)
-
-# blocks per chunk of the serving path: full chunks run through one jitted
-# lax.map, the remainder runs block-by-block — exactly two traces, ever
-CHUNK_BLOCKS = 64
+from repro.core.segment import (SegmentPlan, apply_hardware_config,
+                                build_segment_plan, dispatch_table,
+                                INTERPRET, _p)
 
 
 class CompiledGradient:
     """Frozen compile-once / run-many pipeline artifact.
 
     Treat instances as immutable: they are shared via the compile cache, so
-    mutating one corrupts every holder.  All fields are set at compile time
-    except the dataflow summary, which is computed lazily (the FIFO-depth
-    search can take minutes on large graphs) and then cached on the artifact.
+    mutating one corrupts every holder.  All fields are set at compile time,
+    with two documented exceptions that never change what the artifact
+    computes: the dataflow summaries are computed lazily (the FIFO-depth
+    search can take minutes on large graphs) and then cached on the
+    artifact, keyed by their parameters; and ``autoconfig`` is a write-once
+    metadata slot — ``None`` unless/until a ``config="auto"`` request
+    resolves to this artifact's config, at which point the search record is
+    attached (None -> AutoConfigResult, monotonic, set at most once).
     """
 
-    def __init__(self, graph: ComputeGraph, plan: SegmentPlan, *, block: int,
-                 use_pallas: bool, residents: dict, dispatch: list,
-                 source: str | None, fn=None, order: int | None = None):
+    def __init__(self, graph: ComputeGraph, plan: SegmentPlan, *,
+                 config: HardwareConfig, residents: dict, dispatch: list,
+                 source: str | None, fn=None, order: int | None = None,
+                 autoconfig=None):
         self.graph = graph
         self.plan = plan
-        self.block = block
-        self.use_pallas = use_pallas
+        self.config = config              # resolved HardwareConfig
         self.residents = residents        # node id -> concrete jax.Array
         self.dispatch = dispatch          # [(segment id, kind, kernel)]
         self.source = source              # emitted Python module (codegen)
         self.fn = fn                      # original INR fn (None via graph path)
         self.order = order
-        self._dataflow = None
+        self.autoconfig = autoconfig      # AutoConfigResult when config="auto"
+        self._dataflow: dict[tuple, dict] = {}
         self._decisions = {sid: kernel for sid, _, kernel in dispatch}
         self._streamed_outs = [o for o in graph.outputs
                                if o not in plan.resident]
         # the one jitted block pipeline (serving granule) ...
         self._block_apply = jax.jit(self._make_block_fn())
-        # ... its chunked form (lax.map over CHUNK_BLOCKS blocks) ...
+        # ... its chunked form (lax.map over config.chunk_blocks blocks) ...
         self._chunk_apply = jax.jit(self._make_chunk_fn())
         # ... and the classic full-plan-batch streaming execution
         self.apply = jax.jit(self._make_apply())
+
+    # the old scattered knobs, now views of the one config
+    @property
+    def block(self) -> int:
+        return self.config.block
+
+    @property
+    def use_pallas(self) -> bool:
+        return self.config.use_pallas
 
     # -- execution ---------------------------------------------------------
 
     def _make_block_fn(self):
         plan, g = self.plan, self.graph
         decisions, res_env = self._decisions, self.residents
-        block, B = self.block, plan.batch
+        block, B = self.config.block, plan.batch
         input_nodes = [g.nodes[i] for i in plan.inputs]
         streamed_outs = self._streamed_outs
 
@@ -99,7 +123,7 @@ class CompiledGradient:
 
     def _make_apply(self):
         plan, g = self.plan, self.graph
-        res_env, block = self.residents, self.block
+        res_env, block = self.residents, self.config.block
         B = plan.batch
         n_blocks = B // block
         block_fn = self._make_block_fn()
@@ -117,23 +141,27 @@ class CompiledGradient:
                          for o in g.outputs)
         return apply
 
-    def apply_batched(self, coords, *, chunk_blocks: int = CHUNK_BLOCKS):
+    def apply_batched(self, coords):
         """Serve an arbitrary number of query rows through the compiled
         pipeline.
 
         ``coords`` is [N, ...features] for any N: the batch is padded to a
         block multiple (edge rows replicated — padding never reaches the
-        caller), full chunks of ``chunk_blocks`` blocks stream through one
-        jitted ``lax.map``, remainder blocks through the jitted per-block
-        pipeline, and the first N rows of each output are returned.  Only two
-        traces ever compile, no matter how many batch sizes are served.
+        caller), full chunks of ``config.chunk_blocks`` blocks stream through
+        one jitted ``lax.map``, remainder blocks through the jitted per-block
+        pipeline, and the first N rows of each output are returned.  The
+        chunk size is part of the artifact's HardwareConfig, so exactly two
+        traces compile per artifact, no matter how many batch sizes are
+        served — a different chunking is a different (cached) artifact, not a
+        retrace of this one.
         """
         if len(self.plan.inputs) != 1:
             raise ValueError("apply_batched serves single-input (coordinate) "
                              "pipelines; use apply() for multi-input graphs")
         coords = jnp.asarray(coords)
         n = coords.shape[0]
-        block = self.block
+        block = self.config.block
+        chunk_blocks = self.config.chunk_blocks
         if n == 0:
             return tuple(
                 self._resident_output(o, 0) if o in self.plan.resident
@@ -175,24 +203,38 @@ class CompiledGradient:
 
     # -- the rest of the artifact ------------------------------------------
 
-    def dataflow_summary(self, *, dataflow_block: int = 64,
-                         mm_parallel: int = 16) -> dict:
+    def dataflow_summary(self, *, dataflow_block: int | None = None,
+                         mm_parallel: int | None = None) -> dict:
         """FIFO-optimized dataflow summary for this plan (lazy; the FIFO
-        search is the expensive part of the paper's compiler).  Computed once
-        with the first call's parameters, then cached on the artifact."""
-        if self._dataflow is None:
+        search is the expensive part of the paper's compiler).
+
+        Defaults come from the artifact's HardwareConfig — ``dataflow_block``
+        from ``config.dataflow_block``, MM parallelism per segment from the
+        config's stamps.  Passing ``mm_parallel`` explicitly applies one
+        uniform factor instead (what the table sweeps do).  Summaries are
+        cached on the artifact KEYED BY THOSE PARAMETERS, so different
+        arguments get different (correct) summaries rather than the first
+        call's."""
+        cfg = self.config
+        db = dataflow_block if dataflow_block is not None else cfg.dataflow_block
+        key = (db, mm_parallel if mm_parallel is not None
+               else ("config", cfg.mm_parallel, cfg.mm_parallel_per_segment))
+        cached = self._dataflow.get(key)
+        if cached is None:
             from repro.core.dataflow import map_to_dataflow
             from repro.core.fifo_opt import optimize_fifo_depths
-            design = map_to_dataflow(self.graph, block=dataflow_block,
-                                     mm_parallel=mm_parallel, plan=self.plan)
-            res = optimize_fifo_depths(design)
-            self._dataflow = {"design": design, "fifo": res, **res.summary()}
-        return self._dataflow
+            design = map_to_dataflow(
+                self.graph, block=db, mm_parallel=mm_parallel,
+                plan=self.plan, config=None if mm_parallel is not None else cfg)
+            res = optimize_fifo_depths(design, config=cfg)
+            cached = {"design": design, "fifo": res, **res.summary()}
+            self._dataflow[key] = cached
+        return cached
 
     def describe(self) -> str:
         kernels = [k for _, _, k in self.dispatch if k != INTERPRET]
-        lines = [f"CompiledGradient(order={self.order}, block={self.block}, "
-                 f"use_pallas={self.use_pallas}): "
+        lines = [f"CompiledGradient(order={self.order}, "
+                 f"config=[{self.config.describe()}]): "
                  f"{len(self.graph.nodes)} nodes, "
                  f"{len(self.plan.segments)} segments, "
                  f"{len(self.residents)} residents, "
@@ -205,31 +247,39 @@ class CompiledGradient:
 # compilation
 # ---------------------------------------------------------------------------
 
-def _resolve_use_pallas(use_pallas: bool | None) -> bool:
-    if use_pallas is None:
-        return jax.default_backend() == "tpu"
-    return bool(use_pallas)
-
-
-def compile_from_graph(g: ComputeGraph, *, block: int = 8,
+def compile_from_graph(g: ComputeGraph, *,
+                       config: HardwareConfig | None = None,
+                       block: int | None = None,
                        use_pallas: bool | None = None,
                        plan: SegmentPlan | None = None,
                        emit_source: bool = True,
-                       fn=None, order: int | None = None) -> CompiledGradient:
+                       fn=None, order: int | None = None,
+                       autoconfig=None) -> CompiledGradient:
     """Compile an already-extracted, optimized ComputeGraph into a
     CompiledGradient.  The plan is built once (or taken as given) and drives
     the executor, the emitted source, and the lazy dataflow summary alike —
-    nothing downstream re-derives it."""
-    assert check_streamable(g), "graph is not batch-streamable"
-    if plan is None:
-        plan = build_segment_plan(g)
-    use_pallas = _resolve_use_pallas(use_pallas)
-    B = plan.batch
-    block = min(block, B)
-    if B % block != 0:
-        raise ValueError(f"plan batch {B} is not a multiple of block {block}")
+    nothing downstream re-derives it.
 
-    dispatch = (dispatch_table(plan) if use_pallas
+    Hardware parameters come from ``config``; ``block`` / ``use_pallas`` are
+    conveniences folded into it (``as_hardware_config``)."""
+    assert check_streamable(g), "graph is not batch-streamable"
+    cfg = as_hardware_config(config, block=block,
+                             use_pallas=use_pallas).resolved()
+    if plan is None:
+        plan = build_segment_plan(g, config=cfg)
+    B = plan.batch
+    cfg = cfg.clamped(B)
+    if B % cfg.block != 0:
+        raise ValueError(f"plan batch {B} is not a multiple of block "
+                         f"{cfg.block}")
+    if plan.config != cfg:
+        # a caller-provided plan (or a pre-clamp build) gets the final
+        # config stamped so MM segments carry their parallelism; a plan
+        # already stamped with a DIFFERENT config is copied, not mutated —
+        # earlier artifacts sharing it keep the config they compiled with
+        plan = apply_hardware_config(plan, cfg)
+
+    dispatch = (dispatch_table(plan) if cfg.use_pallas
                 else [(s.id, s.kind, INTERPRET) for s in plan.segments])
 
     # precompute residents once: the paper's on-chip tensors, never re-derived
@@ -241,11 +291,11 @@ def compile_from_graph(g: ComputeGraph, *, block: int = 8,
         else:
             residents[nid] = _eval_node(n, [residents[i] for i in n.inputs])
 
-    source = (codegen.emit_python(g, block=block, plan=plan)
+    source = (codegen.emit_python(g, plan=plan, config=cfg)
               if emit_source else None)
-    return CompiledGradient(g, plan, block=block, use_pallas=use_pallas,
-                            residents=residents, dispatch=dispatch,
-                            source=source, fn=fn, order=order)
+    return CompiledGradient(g, plan, config=cfg, residents=residents,
+                            dispatch=dispatch, source=source, fn=fn,
+                            order=order, autoconfig=autoconfig)
 
 
 # ---------------------------------------------------------------------------
@@ -280,7 +330,26 @@ def clear_compile_cache() -> None:
     executor._GRAPH_CACHE.clear()
 
 
-def compile_gradient(fn, order: int, example_coords, *, block: int = 8,
+def _trace_graph(fn, order: int, trace_b: int, shape, dtype) -> ComputeGraph:
+    """Extract + optimize the order-th gradient graph of fn at the trace
+    batch (the front half of the compiler, shared by every config)."""
+    # gradnet lives one layer up; import lazily to keep core's import DAG flat
+    from repro.core.passes import optimize
+    from repro.core.trace import extract_graph
+    from repro.inr.gradnet import paper_gradients
+
+    abstract = jax.ShapeDtypeStruct((trace_b,) + tuple(shape[1:]), dtype)
+    out = jax.eval_shape(fn, abstract)
+    gfn = paper_gradients(fn, order, out_features=out.shape[-1],
+                          in_features=shape[-1])
+    g = extract_graph(gfn, abstract)
+    optimize(g)
+    return g
+
+
+def compile_gradient(fn, order: int, example_coords, *,
+                     config: HardwareConfig | str | None = None,
+                     block: int | None = None,
                      use_pallas: bool | None = None) -> CompiledGradient:
     """The pipeline front door: compile-or-hit the full INR-Arch compiler for
     the ``order``-th gradient computation of INR ``fn``.
@@ -288,36 +357,91 @@ def compile_gradient(fn, order: int, example_coords, *, block: int = 8,
     ``example_coords`` only contributes shape and dtype (a concrete array or
     a ``jax.ShapeDtypeStruct`` both work); its batch dim is rounded up to a
     block multiple for the trace (``apply`` expects that rounded batch;
-    ``apply_batched`` serves any N regardless).  Repeat calls with the same
-    (fn identity, order, coord shape/dtype, block, use_pallas) return the
-    SAME artifact — no re-trace, no re-optimize, no re-plan.
+    ``apply_batched`` serves any N regardless).
+
+    ``config`` selects the hardware parameters:
+
+      * a ``HardwareConfig`` — used as given (``block`` / ``use_pallas``
+        kwargs override its fields);
+      * ``None`` — ``DEFAULT_CONFIG`` (with the same overrides);
+      * ``"auto"`` — ``core.autoconfig.resolve_config`` picks block and
+        per-MM-segment parallelism with the dataflow latency oracle,
+        rejecting deadlock-flagged candidates (the paper's automatic
+        hardware-parameter configuration); the result rides on the artifact
+        as ``cg.autoconfig``.
+
+    Repeat calls with the same (fn identity, order, coord shape/dtype,
+    resolved HardwareConfig) return the SAME artifact — no re-trace, no
+    re-optimize, no re-plan.  The cache is keyed on the RESOLVED config, so
+    distinct configs get distinct entries, and ``config="auto"`` shares its
+    entry with an explicit request for whatever config it resolved to.
     """
-    use_pallas = _resolve_use_pallas(use_pallas)
     shape = tuple(example_coords.shape)
     dtype = str(jnp.dtype(example_coords.dtype))
+
+    if isinstance(config, str):
+        if config != "auto":
+            raise ValueError(f"config must be a HardwareConfig, None, or "
+                             f"'auto'; got {config!r}")
+        return _compile_auto(fn, order, shape, dtype, block=block,
+                             use_pallas=use_pallas)
+
+    cfg = as_hardware_config(config, block=block,
+                             use_pallas=use_pallas).resolved()
     # key on the block-rounded TRACE batch, so every shape that compiles to
     # the same artifact shares one cache entry
-    trace_b = shape[0] + (-shape[0]) % block
+    trace_b = shape[0] + (-shape[0]) % cfg.block
     key = (_fn_key(fn), int(order), (trace_b,) + shape[1:], dtype,
-           int(block), use_pallas)
+           cfg.clamped(trace_b))
     hit = _CACHE.get(key)
     if hit is not None:
         _STATS["hits"] += 1
         return hit
     _STATS["misses"] += 1
 
-    # gradnet lives one layer up; import lazily to keep core's import DAG flat
-    from repro.core.passes import optimize
-    from repro.core.trace import extract_graph
-    from repro.inr.gradnet import paper_gradients
-
-    abstract = jax.ShapeDtypeStruct((trace_b,) + shape[1:], dtype)
-    out = jax.eval_shape(fn, abstract)
-    gfn = paper_gradients(fn, order, out_features=out.shape[-1],
-                          in_features=shape[-1])
-    g = extract_graph(gfn, abstract)
-    optimize(g)
-    cg = compile_from_graph(g, block=block, use_pallas=use_pallas,
-                            fn=fn, order=order)
+    g = _trace_graph(fn, order, trace_b, shape, dtype)
+    cg = compile_from_graph(g, config=cfg, fn=fn, order=order)
     _CACHE[key] = cg
+    return cg
+
+
+def _compile_auto(fn, order: int, shape, dtype, *,
+                  block: int | None = None,
+                  use_pallas: bool | None = None) -> CompiledGradient:
+    """config="auto": trace once, let autoconfig pick the HardwareConfig,
+    compile with the winner, and cache under BOTH the auto request and the
+    resolved config (so explicit requests for the winner hit the same
+    artifact)."""
+    from repro.core.autoconfig import resolve_config
+
+    base = as_hardware_config(None, block=block,
+                              use_pallas=use_pallas).resolved()
+    # round the trace batch to the LCM-ish of the block candidates (multiples
+    # of 8) so the search may pick any block that divides it
+    trace_b = shape[0] + (-shape[0]) % 8
+    auto_key = (_fn_key(fn), int(order), (trace_b,) + tuple(shape[1:]), dtype,
+                "auto", base)
+    hit = _CACHE.get(auto_key)
+    if hit is not None:
+        _STATS["hits"] += 1
+        return hit
+    _STATS["misses"] += 1
+
+    g = _trace_graph(fn, order, trace_b, shape, dtype)
+    plan = build_segment_plan(g)
+    result = resolve_config(g, plan, base=base)
+    cfg = result.config
+
+    resolved_key = (_fn_key(fn), int(order), (trace_b,) + tuple(shape[1:]),
+                    dtype, cfg.clamped(trace_b))
+    cg = _CACHE.get(resolved_key)
+    if cg is None:
+        cg = compile_from_graph(g, config=cfg, plan=plan, fn=fn, order=order,
+                                autoconfig=result)
+        _CACHE[resolved_key] = cg
+    elif cg.autoconfig is None:
+        # the search resolved to a config already compiled explicitly (e.g.
+        # the default); share the artifact and attach the search record
+        cg.autoconfig = result
+    _CACHE[auto_key] = cg
     return cg

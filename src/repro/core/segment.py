@@ -37,6 +37,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from repro.core.config import HardwareConfig
 from repro.core.graph import ComputeGraph, Node
 
 # ---------------------------------------------------------------------------
@@ -191,6 +192,7 @@ class SegmentPlan:
     inputs: tuple[int, ...]           # Input node ids, ordered by idx param
     batch: int | None
     segment_of: dict[int, int]        # node id -> segment id
+    config: HardwareConfig | None = None   # hardware config stamped on the plan
 
     # -- queries -----------------------------------------------------------
     def segment(self, sid: int) -> Segment:
@@ -324,9 +326,42 @@ def _grow_stream_chain(g, start: Node, consumers, resident, assigned):
     return nodes, {"chain": spec}
 
 
-def build_segment_plan(g: ComputeGraph) -> SegmentPlan:
+def apply_hardware_config(plan: SegmentPlan,
+                          config: HardwareConfig) -> SegmentPlan:
+    """Stamp a HardwareConfig onto a plan: every MatMul / FusedMmAct segment
+    carries its own MM parallelism in ``seg.meta['mm_parallel']`` (read by the
+    executor's kernel dispatch and the dataflow latency model), and the plan
+    records the config it was configured for.  Segment ids are deterministic
+    for a given graph, so per-segment overrides in the config address stable
+    targets.
+
+    Returns the same plan, mutated in place, when the plan is unconfigured
+    (``plan.config is None``) or already configured identically; a plan that
+    carries a DIFFERENT config is never touched — a shallow copy with fresh
+    segment metas is stamped and returned instead, so artifacts compiled
+    earlier from the same plan object keep the parallelism they were
+    compiled with."""
+    if plan.config is not None and plan.config != config:
+        import dataclasses
+        segments = [dataclasses.replace(s, meta=dict(s.meta))
+                    for s in plan.segments]
+        plan = SegmentPlan(
+            graph=plan.graph, segments=segments, edges=list(plan.edges),
+            resident=plan.resident, rowconst=plan.rowconst,
+            inputs=plan.inputs, batch=plan.batch,
+            segment_of=plan.segment_of)
+    for s in plan.segments:
+        if s.kind in (MATMUL, FUSED_MM_ACT):
+            s.meta["mm_parallel"] = config.mm_parallel_for(s.id)
+    plan.config = config
+    return plan
+
+
+def build_segment_plan(g: ComputeGraph, *,
+                       config: HardwareConfig | None = None) -> SegmentPlan:
     """Partition an optimized ComputeGraph into typed segments (the paper's
-    stream-kernel library instance for this graph)."""
+    stream-kernel library instance for this graph).  With ``config``, MM
+    segments carry their parallelism (``apply_hardware_config``)."""
     resident, _ = classify_residents(g)
     rowconst = row_const_residents(g, resident)
     consumers = g.consumers()
@@ -395,6 +430,8 @@ def build_segment_plan(g: ComputeGraph) -> SegmentPlan:
         segment_of=segment_of,
     )
     plan.validate()
+    if config is not None:
+        apply_hardware_config(plan, config)
     return plan
 
 

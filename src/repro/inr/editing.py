@@ -37,7 +37,7 @@ def sharpen(img, amount: float = 1.0):
 def train_insp_head(siren_cfg: SirenConfig, insp_cfg: InspConfig,
                     siren_params, target_img, *, steps: int = 300,
                     lr: float = 1e-3, batch: int = 512, key=None,
-                    block: int = 8, compiled=None):
+                    config=None, block: int | None = None, compiled=None):
     """Fit psi so INSP(features(x)) ~= target_img(x).  Returns (psi, mse).
 
     The gradient features of the (frozen) SIREN are what INR-Arch
@@ -54,7 +54,7 @@ def train_insp_head(siren_cfg: SirenConfig, insp_cfg: InspConfig,
     f = siren_fn(siren_cfg, siren_params)
     if compiled is None:
         feats_fn, compiled = compiled_feature_vector(
-            f, insp_cfg.grad_order, coords, block=block)
+            f, insp_cfg.grad_order, coords, config=config, block=block)
     else:
         feats_fn = feature_vector(f, insp_cfg.grad_order, compiled=compiled)
     feats = feats_fn(coords)                 # one streamed pass, all pixels

@@ -59,14 +59,19 @@ def feature_vector(f, order: int, *, compiled=None):
     return feats
 
 
-def compiled_feature_vector(f, order: int, example_coords, *, block: int = 8,
+def compiled_feature_vector(f, order: int, example_coords, *,
+                            config=None, block: int | None = None,
                             use_pallas: bool | None = None):
     """Compile-or-hit the gradient pipeline for ``f`` and return
-    ``(feats_fn, CompiledGradient)`` — the serving-path feature extractor."""
+    ``(feats_fn, CompiledGradient)`` — the serving-path feature extractor.
+
+    ``config`` is a ``HardwareConfig``, ``None`` (defaults), or ``"auto"``
+    (autoconfig picks the hardware parameters); ``block`` / ``use_pallas``
+    are conveniences folded into it."""
     from repro.core.pipeline import compile_gradient
 
-    cg = compile_gradient(f, order, example_coords, block=block,
-                          use_pallas=use_pallas)
+    cg = compile_gradient(f, order, example_coords, config=config,
+                          block=block, use_pallas=use_pallas)
     return feature_vector(f, order, compiled=cg), cg
 
 

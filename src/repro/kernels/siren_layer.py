@@ -37,12 +37,19 @@ def _siren_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, k_steps: int,
 
 def siren_layer(x: jax.Array, w: jax.Array, b: jax.Array, *, w0: float = 30.0,
                 apply_sin: bool = True, bm: int = 128, bn: int = 128,
-                bk: int = 128, interpret: bool | None = None):
-    """x: [B, K], w: [K, N], b: [N] -> sin(w0 (x@w + b)) (or linear)."""
+                bk: int = 128, interpret: bool | None = None,
+                mm_parallel: int | None = None):
+    """x: [B, K], w: [K, N], b: [N] -> sin(w0 (x@w + b)) (or linear).
+
+    ``mm_parallel`` (from the segment's HardwareConfig stamp) sizes the
+    reduction tile ``bk``, as in ``stream_matmul``."""
+    from repro.kernels.stream_matmul import reduction_tile
+
     if interpret is None:
         interpret = interpret_default()
     B, K = x.shape
     _, N = w.shape
+    bk = reduction_tile(bk, mm_parallel)
     bm, bn, bk = min(bm, B), min(bn, N), min(bk, K)
     pm, pn, pk = (-B) % bm, (-N) % bn, (-K) % bk
     if pm or pk:

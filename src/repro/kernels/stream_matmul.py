@@ -33,15 +33,31 @@ def _mm_kernel(a_ref, b_ref, o_ref, acc_ref, *, k_steps: int):
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
+def reduction_tile(bk: int, mm_parallel: int | None) -> int:
+    """Map the HardwareConfig MM parallelism factor onto the Pallas reduction
+    tile: the dataflow model's initiation interval is ceil(K / mm_parallel)
+    and the TPU analogue reduces bk elements of K per grid step, so bk tracks
+    mm_parallel (rounded up to the 8-lane sublane width)."""
+    if mm_parallel is None:
+        return bk
+    return min(bk, max(8, -(-int(mm_parallel) // 8) * 8))
+
+
 def stream_matmul(a: jax.Array, b: jax.Array, *, bm: int = 128, bn: int = 128,
-                  bk: int = 128, out_dtype=None, interpret: bool | None = None):
-    """C = A @ B with explicit VMEM tiling.  A: [M, K], B: [K, N]."""
+                  bk: int = 128, out_dtype=None, interpret: bool | None = None,
+                  mm_parallel: int | None = None):
+    """C = A @ B with explicit VMEM tiling.  A: [M, K], B: [K, N].
+
+    ``mm_parallel`` (from the segment's HardwareConfig stamp) sizes the
+    reduction tile ``bk`` — the kernel-side meaning of the paper's MM
+    parallelism factor."""
     if interpret is None:
         interpret = interpret_default()
     M, K = a.shape
     K2, N = b.shape
     assert K == K2, (a.shape, b.shape)
     out_dtype = out_dtype or a.dtype
+    bk = reduction_tile(bk, mm_parallel)
     bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
     pad_m, pad_n, pad_k = (-M) % bm, (-N) % bn, (-K) % bk
     if pad_m or pad_k:

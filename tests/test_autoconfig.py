@@ -1,0 +1,215 @@
+"""Autoconfig: the paper's automatic hardware-parameter configuration.
+
+Covers the ISSUE-3 acceptance surface: deterministic resolution, deadlock
+rejection (every accepted candidate is deadlock-free), numeric parity of
+config="auto" with the default config across orders 1-3, and compile-cache
+keying on the resolved HardwareConfig (distinct configs = distinct entries).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.siren import SirenConfig
+from repro.core import autoconfig as AC
+from repro.core import pipeline as P
+from repro.core.config import DEFAULT_CONFIG, HardwareConfig
+from repro.core.dataflow import DataflowGraph, map_to_dataflow
+from repro.core.fifo_opt import optimize_fifo_depths
+from repro.core.passes import optimize
+from repro.core.segment import FUSED_MM_ACT, MATMUL, build_segment_plan
+from repro.core.trace import extract_graph
+from repro.inr.gradnet import paper_gradients
+from repro.inr.siren import siren_fn, siren_init
+
+
+@pytest.fixture(autouse=True)
+def fresh_cache():
+    P.clear_compile_cache()
+    yield
+    P.clear_compile_cache()
+
+
+@pytest.fixture(scope="module")
+def small_siren():
+    cfg = SirenConfig(hidden_features=16, hidden_layers=1)
+    params = siren_init(cfg, jax.random.PRNGKey(0))
+    f = siren_fn(cfg, params)
+    x = jax.random.uniform(jax.random.PRNGKey(1),
+                           (16, cfg.in_features), jnp.float32, -1, 1)
+    return cfg, f, x
+
+
+@pytest.fixture(scope="module")
+def siren_graph(small_siren):
+    cfg, f, x = small_siren
+    gfn = paper_gradients(f, 2, cfg.out_features, cfg.in_features)
+    g = extract_graph(gfn, x)
+    optimize(g)
+    return g
+
+
+# -- HardwareConfig itself --------------------------------------------------
+
+def test_config_is_frozen_hashable_and_normalized():
+    a = HardwareConfig(mm_parallel_per_segment=((3, 16), (1, 32)))
+    b = HardwareConfig(mm_parallel_per_segment=((1, 32), (3, 16)))
+    assert a == b and hash(a) == hash(b), "override order must not matter"
+    assert a.mm_parallel_for(1) == 32
+    assert a.mm_parallel_for(3) == 16
+    assert a.mm_parallel_for(99) == a.mm_parallel
+    with pytest.raises(Exception):
+        a.block = 4                          # frozen
+    with pytest.raises(ValueError):
+        HardwareConfig(block=0)
+    with pytest.raises(ValueError):
+        HardwareConfig(mm_parallel_per_segment=((0, -1),))
+
+
+def test_config_resolved_concretizes_use_pallas():
+    cfg = HardwareConfig()
+    assert cfg.use_pallas is None
+    r = cfg.resolved()
+    assert isinstance(r.use_pallas, bool)
+    assert r.resolved() is r                # already concrete: no-op
+    assert HardwareConfig(use_pallas=False).resolved().use_pallas is False
+
+
+def test_plan_carries_mm_parallel_stamps(siren_graph):
+    cfg = HardwareConfig(mm_parallel=32).resolved()
+    plan = build_segment_plan(siren_graph, config=cfg)
+    assert plan.config == cfg
+    mm = [s for s in plan.segments if s.kind in (MATMUL, FUSED_MM_ACT)]
+    assert mm, "2nd-order SIREN graph has MM segments"
+    assert all(s.meta["mm_parallel"] == 32 for s in mm)
+
+
+def test_recompiling_a_shared_plan_never_restamps_it(siren_graph):
+    """An artifact keeps the parallelism it was compiled with even when the
+    same plan object is later compiled under a different config: the second
+    compile stamps a copy, not the shared plan."""
+    plan = build_segment_plan(siren_graph)
+    a = P.compile_from_graph(siren_graph, plan=plan,
+                             config=HardwareConfig(mm_parallel=16,
+                                                   use_pallas=False))
+    b = P.compile_from_graph(siren_graph, plan=plan,
+                             config=HardwareConfig(mm_parallel=64,
+                                                   use_pallas=False))
+    assert a.plan is plan, "first compile stamps the unconfigured plan"
+    assert b.plan is not plan, "second compile must not mutate a's plan"
+    mm_a = [s for s in a.plan.segments if s.kind in (MATMUL, FUSED_MM_ACT)]
+    mm_b = [s for s in b.plan.segments if s.kind in (MATMUL, FUSED_MM_ACT)]
+    assert all(s.meta["mm_parallel"] == 16 for s in mm_a)
+    assert all(s.meta["mm_parallel"] == 64 for s in mm_b)
+    assert a.plan.config.mm_parallel == 16
+
+
+# -- resolution -------------------------------------------------------------
+
+def test_resolve_config_is_deterministic(siren_graph):
+    a = AC.resolve_config(siren_graph)
+    b = AC.resolve_config(siren_graph)
+    assert a.config == b.config
+    assert a.predicted_latency == b.predicted_latency
+    assert a.candidates == b.candidates
+
+
+def test_resolve_config_never_worse_than_base(siren_graph):
+    res = AC.resolve_config(siren_graph)
+    assert res.predicted_row_cycles <= res.baseline_row_cycles
+    assert res.evaluated >= 1
+    assert res.mm_segments, "search targeted the MM segments"
+
+
+def test_every_accepted_candidate_is_deadlock_free(siren_graph):
+    res = AC.resolve_config(siren_graph)
+    # the search log: any candidate marked accepted must not be deadlocked,
+    # and only deadlock-free points may have fed the greedy allocation
+    assert any(c.accepted for c in res.candidates)
+    assert all(not c.deadlocked for c in res.candidates if c.accepted)
+    # independent verification of the winner: naive-depth deadlock check AND
+    # the full FIFO optimization both come out clean
+    plan = build_segment_plan(siren_graph, config=res.config)
+    design = map_to_dataflow(siren_graph, plan=plan, config=res.config)
+    dg = DataflowGraph(design)
+    naive = {s: max(design.streams[s].n_blocks, 2) for s in design.streams}
+    dead, _, _ = dg.check(naive)
+    assert not dead
+    fifo = optimize_fifo_depths(design, config=res.config)
+    dead_final, _, _ = dg.check(fifo.depths_after)
+    assert not dead_final
+
+
+def test_resolve_mode_default_returns_base(siren_graph):
+    base = HardwareConfig(mm_parallel=16).resolved()
+    res = AC.resolve_config(siren_graph, mode="default", base=base)
+    assert res.config == base
+    assert res.predicted_latency == res.baseline_latency
+
+
+def test_resolve_config_respects_budget(siren_graph):
+    plan = build_segment_plan(siren_graph)
+    res = AC.resolve_config(siren_graph, plan)
+    n_mm = len(res.mm_segments)
+    budget = DEFAULT_CONFIG.mm_parallel * n_mm
+    spent = sum(res.config.mm_parallel_for(s) for s in res.mm_segments)
+    assert spent <= budget, "allocation stays within the parallelism pool"
+
+
+def test_measure_hook_refines_block(siren_graph):
+    # a measure hook that prefers the largest block must steer the choice
+    res = AC.resolve_config(siren_graph, measure=lambda c: -c.block)
+    assert res.config.block == max(
+        b for b in AC.BLOCK_CANDIDATES if 16 % b == 0)
+
+
+# -- the auto front door ----------------------------------------------------
+
+@pytest.mark.parametrize("order", [1, 2, 3])
+def test_auto_matches_default_numerically(small_siren, order):
+    cfg, f, x = small_siren
+    auto = P.compile_gradient(f, order, x, config="auto")
+    default = P.compile_gradient(f, order, x)
+    assert auto.autoconfig is not None
+    assert auto.config == auto.autoconfig.config.clamped(auto.plan.batch)
+    got = auto.apply_batched(x)
+    want = default.apply_batched(x)
+    assert len(got) == len(want)
+    for a, b in zip(want, got):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+def test_auto_is_cached_and_shares_resolved_entry(small_siren):
+    cfg, f, x = small_siren
+    auto = P.compile_gradient(f, 1, x, config="auto")
+    assert P.compile_gradient(f, 1, x, config="auto") is auto
+    # an explicit request for the resolved config hits the same artifact
+    assert P.compile_gradient(f, 1, x, config=auto.config) is auto
+
+
+def test_distinct_configs_distinct_cache_entries(small_siren):
+    cfg, f, x = small_siren
+    a = P.compile_gradient(f, 1, x, config=HardwareConfig(block=8))
+    b = P.compile_gradient(f, 1, x, config=HardwareConfig(block=8,
+                                                          mm_parallel=64))
+    c = P.compile_gradient(f, 1, x, config=HardwareConfig(block=8,
+                                                          chunk_blocks=4))
+    assert a is not b and a is not c and b is not c
+    assert P.compile_gradient(f, 1, x, config=HardwareConfig(block=8)) is a
+    # legacy kwargs fold into the default config: same resolved key
+    assert P.compile_gradient(f, 1, x, block=8) is a
+
+
+def test_artifact_and_source_record_the_config(small_siren):
+    cfg, f, x = small_siren
+    hw = HardwareConfig(block=4, mm_parallel=32)
+    cg = P.compile_gradient(f, 1, x, config=hw)
+    assert cg.config.block == 4 and cg.config.mm_parallel == 32
+    assert isinstance(cg.config.use_pallas, bool), "artifact config resolved"
+    assert cg.block == 4, "legacy .block view reads the config"
+    assert "HARDWARE_CONFIG" in cg.source
+    assert "'mm_parallel': 32" in cg.source
+    # MM segments in the compiled plan carry the parallelism stamp
+    mm = [s for s in cg.plan.segments if s.kind in (MATMUL, FUSED_MM_ACT)]
+    assert all(s.meta["mm_parallel"] == 32 for s in mm)

@@ -110,13 +110,21 @@ def test_apply_batched_matches_reference_on_unpadded_rows(small_siren, order):
 
 def test_apply_batched_chunked_path(small_siren):
     """Batches large enough to hit the chunked lax.map path agree with the
-    per-block path and the reference."""
+    per-block path and the reference.  The chunk size is part of the
+    artifact's HardwareConfig (not a per-call kwarg), so each artifact
+    compiles exactly two traces regardless of the batch sizes served."""
+    from repro.core.config import HardwareConfig
+
     cfg, f, x = small_siren
-    cg = P.compile_gradient(f, 1, x, block=8)
+    cg_chunked = P.compile_gradient(
+        f, 1, x, config=HardwareConfig(block=8, chunk_blocks=2))
+    cg_blocks = P.compile_gradient(
+        f, 1, x, config=HardwareConfig(block=8, chunk_blocks=10**9))
+    assert cg_chunked is not cg_blocks, "distinct configs, distinct artifacts"
     q = jax.random.uniform(jax.random.PRNGKey(7),
                            (70, cfg.in_features), jnp.float32, -1, 1)
-    got_chunked = cg.apply_batched(q, chunk_blocks=2)   # 4 chunks + 1 block
-    got_blocks = cg.apply_batched(q, chunk_blocks=10**9)
+    got_chunked = cg_chunked.apply_batched(q)   # 4 chunks + 1 block
+    got_blocks = cg_blocks.apply_batched(q)     # blocks only
     for a, b in zip(got_chunked, got_blocks):
         np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
     gfn = paper_gradients(f, 1, cfg.out_features, cfg.in_features)
@@ -135,9 +143,15 @@ def test_artifact_carries_the_whole_pipeline(small_siren):
         nid in cg.plan.resident for nid in cg.residents)
     assert len(cg.dispatch) == len(cg.plan.segments)
     assert "def pipeline(" in cg.source
+    assert "HARDWARE_CONFIG" in cg.source, "source records its config"
     summary = cg.dataflow_summary()
     assert summary["sum_depths_after"] <= summary["sum_depths_before"]
     assert cg.dataflow_summary() is summary, "dataflow summary is cached"
+    # the cache is keyed by parameters: different arguments get their own
+    # (correct) summary instead of silently reusing the first call's
+    other = cg.dataflow_summary(mm_parallel=64)
+    assert other is not summary
+    assert cg.dataflow_summary(mm_parallel=64) is other
 
 
 def test_streaming_executor_is_a_cache_wrapper(small_siren):
