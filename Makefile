@@ -2,13 +2,16 @@
 
 PY ?= python
 
-.PHONY: test test-fast bench bench-segments bench-pipeline bench-autotune bench-json
+.PHONY: test test-fast serve-smoke bench bench-segments bench-pipeline bench-autotune bench-serve bench-json
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
 
 test-fast:
 	PYTHONPATH=src $(PY) -m pytest -x -q -m "not slow"
+
+serve-smoke:
+	PYTHONPATH=src $(PY) scripts/serve_smoke.py
 
 bench:
 	PYTHONPATH=src $(PY) -m benchmarks.run
@@ -21,6 +24,9 @@ bench-pipeline:
 
 bench-autotune:
 	PYTHONPATH=src $(PY) -m benchmarks.run autotune
+
+bench-serve:
+	PYTHONPATH=src $(PY) -m benchmarks.run serve
 
 bench-json:
 	PYTHONPATH=src $(PY) -m benchmarks.run --json

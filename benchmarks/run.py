@@ -17,7 +17,7 @@ import sys
 import time
 
 from benchmarks import (autotune_bench, common, higher_order, kernels_bench,
-                        pipeline_bench, roofline, segments_bench,
+                        pipeline_bench, roofline, segments_bench, serve_bench,
                         table1_latency, table2_parallelism, table3_graphopt,
                         table4_fifo)
 
@@ -31,6 +31,7 @@ ALL = {
     "segments": segments_bench.run,
     "pipeline": pipeline_bench.run,
     "autotune": autotune_bench.run,
+    "serve": serve_bench.run,
     "higher_order": higher_order.run,       # opt-in: ~3 min FIFO search
 }
 DEFAULT = [n for n in ALL if n != "higher_order"]

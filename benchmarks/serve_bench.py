@@ -1,0 +1,90 @@
+"""Serving-layer benchmark: artifact cold-start and multi-INR throughput.
+
+Two claims of the serve subsystem (DESIGN.md §6), measured:
+
+  * cold-start — a serving replica's first artifact should come from the
+    warm ArtifactStore (read + rebuild), not from the tracer.  We time
+    trace-from-scratch vs warm-store restore vs in-process cache hit for a
+    2nd-order SIREN gradient pipeline.
+  * multi-INR batching — K weight sets of one architecture served through
+    ONE compiled artifact (stacked residents + vmapped block pipeline)
+    should beat K separate ``apply_batched`` passes.
+
+Emits ``serve/...`` rows; ``--json`` lands them in ``results/serve.json``.
+"""
+
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.configs.siren import SirenConfig
+from repro.core import pipeline as P
+from repro.inr.siren import siren_fn, siren_init
+from repro.serve import ArtifactStore, MultiINRArtifact, bind_weights
+
+
+def run(hidden: int = 64, layers: int = 2, order: int = 2,
+        n_queries: int = 512, n_inrs: int = 8):
+    cfg = SirenConfig(hidden_features=hidden, hidden_layers=layers)
+    params = [siren_init(cfg, jax.random.PRNGKey(100 + k))
+              for k in range(n_inrs)]
+    fns = [siren_fn(cfg, p) for p in params]
+    x = jax.random.uniform(jax.random.PRNGKey(1),
+                           (cfg.batch, cfg.in_features), jnp.float32, -1, 1)
+    q = jax.random.uniform(jax.random.PRNGKey(2),
+                           (n_queries, cfg.in_features), jnp.float32, -1, 1)
+
+    with tempfile.TemporaryDirectory(prefix="inr-serve-bench-") as root:
+        store = ArtifactStore(root)
+
+        # -- cold-start ladder: trace vs warm store vs in-process hit ------
+        P.clear_compile_cache()
+        t0 = time.perf_counter()
+        cg = P.compile_gradient(fns[0], order, x, store=store)
+        cold = (time.perf_counter() - t0) * 1e6
+        emit(f"serve/order{order}/cold_trace_us", cold,
+             f"nodes={len(cg.graph.nodes)} provenance={cg.provenance}",
+             signature=cg.signature)
+
+        P.clear_compile_cache()                  # replica cold start ...
+        t0 = time.perf_counter()
+        warm = P.compile_gradient(fns[0], order, x, store=ArtifactStore(root))
+        restore_us = (time.perf_counter() - t0) * 1e6
+        assert warm.provenance == "store", warm.provenance
+        emit(f"serve/order{order}/warm_restore_us", restore_us,
+             f"speedup_vs_trace={cold / max(restore_us, 1e-3):.1f}x",
+             cold_trace_us=cold)
+
+        t0 = time.perf_counter()
+        assert P.compile_gradient(fns[0], order, x) is warm
+        hit_us = (time.perf_counter() - t0) * 1e6
+        emit(f"serve/order{order}/cache_hit_us", hit_us,
+             f"provenance={warm.provenance}")
+
+        # -- multi-INR: one artifact, K weight sets ------------------------
+        base = warm
+        payloads = [bind_weights(base, params[0], p) for p in params]
+        multi = MultiINRArtifact(base, payloads,
+                                 [f"inr{k}" for k in range(n_inrs)])
+        per_inr = [P.compile_gradient(f_, order, x) for f_ in fns]
+
+        def loop():
+            return [cg_.apply_batched(q) for cg_ in per_inr]
+
+        loop_us = time_fn(loop)
+        emit(f"serve/multi{n_inrs}/per_inr_loop_us", loop_us,
+             f"rows_per_s={n_inrs * n_queries / (loop_us / 1e6):.0f}")
+
+        batched_us = time_fn(lambda: multi.apply_batched(q))
+        emit(f"serve/multi{n_inrs}/batched_us", batched_us,
+             f"rows_per_s={n_inrs * n_queries / (batched_us / 1e6):.0f} "
+             f"speedup_vs_loop={loop_us / max(batched_us, 1e-3):.2f}x",
+             n_inrs=n_inrs, n_queries=n_queries)
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

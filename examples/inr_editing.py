@@ -2,13 +2,19 @@
 train an INSP-Net head to blur it IN WEIGHT SPACE, and serve the edited
 INR through the compiled INR-Arch streaming pipeline.
 
-  PYTHONPATH=src python examples/inr_editing.py
+  PYTHONPATH=src python examples/inr_editing.py [--store DIR]
 
 The gradient features are compiled ONCE (CompiledGradient front door,
 DESIGN.md §4): training streams the full coordinate grid through the
 compiled pipeline up front, and evaluation serves every pixel through the
-same cached artifact — no re-trace anywhere after step 2.
+same cached artifact — no re-trace anywhere after step 2.  With ``--store
+DIR`` the feature pipeline persists to an ArtifactStore (DESIGN.md §6), so
+re-running the edit (same SIREN weights, e.g. trying a different INSP head
+or blur strength) restores the compiled pipeline from disk instead of
+re-tracing the second-order gradient graph.
 """
+
+import argparse
 
 import jax
 import jax.numpy as jnp
@@ -26,6 +32,12 @@ from repro.inr.encode import encode_inr, image_coords, synthetic_image
 from repro.inr.gradnet import compiled_feature_vector
 from repro.inr.siren import siren_fn
 
+ap = argparse.ArgumentParser()
+ap.add_argument("--store", default=None, metavar="DIR",
+                help="persist/restore the compiled feature pipeline under "
+                     "DIR (repeat edits skip re-compilation)")
+STORE = ap.parse_args().store
+
 RES = 32
 scfg = SirenConfig(hidden_features=128, hidden_layers=3)
 icfg = InspConfig(hidden=64, layers=3, grad_order=2)
@@ -41,10 +53,13 @@ coords = image_coords(RES)
 # one HardwareConfig threads every layer below (DESIGN.md §5)
 hw = HardwareConfig(block=8, dataflow_block=64, mm_parallel=16)
 _, cg = compiled_feature_vector(siren_fn(scfg, params), icfg.grad_order,
-                                coords, config=hw)  # compiled ONCE, used twice
+                                coords, config=hw,
+                                store=STORE)  # compiled ONCE, used twice
 psi, emse = train_insp_head(scfg, icfg, params, target, steps=600, lr=2e-3,
                             compiled=cg)
-print(f"   edit-head mse = {emse:.6f}")
+print(f"   edit-head mse = {emse:.6f}"
+      + (f"  [feature pipeline provenance: {cg.provenance}]"
+         if STORE else ""))
 
 print("3) compiling the edited INR with INR-Arch ...")
 g_fn = edited_inr(scfg, icfg, params, psi)

@@ -1,6 +1,6 @@
 """Quickstart: the INR-Arch pipeline in ~40 lines.
 
-  PYTHONPATH=src python examples/quickstart.py
+  PYTHONPATH=src python examples/quickstart.py [--store DIR]
 
 The front door is ``repro.core.pipeline.compile_gradient``: ONE call takes a
 SIREN INR and a gradient order and runs the paper's whole compiler — extract
@@ -10,8 +10,14 @@ CompiledGradient artifact.  The FIFO-optimized dataflow analysis
 (Secs. 3.2.3-4) derives lazily from the same plan.  Compile once, then:
 repeat compilations are cache hits, and ``apply_batched`` streams any number
 of query points through the one jitted block pipeline (the serving path).
+
+With ``--store DIR`` the artifact additionally persists to an ArtifactStore
+(DESIGN.md §6): run the script twice and the second run's "cold" compile is
+a warm-store restore — graph, config, and weights read back from disk, the
+tracer never invoked.
 """
 
+import argparse
 import time
 
 import jax
@@ -23,6 +29,12 @@ from repro.core.pipeline import compile_cache_info, compile_gradient
 from repro.inr.gradnet import paper_gradients
 from repro.inr.siren import siren_fn, siren_init
 
+args = argparse.ArgumentParser()
+args.add_argument("--store", default=None, metavar="DIR",
+                  help="persist/restore compiled artifacts under DIR "
+                       "(second run warm-starts from disk)")
+store = args.parse_args().store
+
 # 1. an INR (SIREN) and a batch of query coordinates
 cfg = SirenConfig()
 params = siren_init(cfg, jax.random.PRNGKey(0))
@@ -30,19 +42,24 @@ f = siren_fn(cfg, params)
 x = jax.random.uniform(jax.random.PRNGKey(1), (cfg.batch, cfg.in_features),
                        jnp.float32, -1, 1)
 
-# 2. compile once — the whole compiler behind one call
+# 2. compile once — the whole compiler behind one call (three-level lookup
+# with --store: in-process cache -> disk store -> trace+compile+persist)
 t0 = time.perf_counter()
-cg = compile_gradient(f, order=2, example_coords=x)
+cg = compile_gradient(f, order=2, example_coords=x, store=store)
 print(f"cold compile: {time.perf_counter() - t0:.2f}s — "
       f"{len(cg.graph.nodes)} nodes, {len(cg.plan.segments)} segments, "
       f"{len(cg.residents)} residents, "
-      f"{len(cg.source.splitlines())} lines of generated source")
+      f"{len(cg.source.splitlines())} lines of generated source "
+      f"[provenance: {cg.provenance}]")
 
 # ... and never again: the same request is a cache hit (same object)
 t0 = time.perf_counter()
-assert compile_gradient(f, order=2, example_coords=x) is cg
+assert compile_gradient(f, order=2, example_coords=x, store=store) is cg
 print(f"cache hit: {(time.perf_counter() - t0) * 1e6:.0f}us "
       f"({compile_cache_info()})")
+if store is not None:
+    print(f"artifact store: signature {cg.signature} under {store!r} — "
+          f"rerun this script and the cold compile becomes a disk restore")
 
 # 3. the dataflow side, from the same plan: deadlock-free FIFO sizing.
 # Parameters come from the artifact's HardwareConfig (one object carries
@@ -62,9 +79,10 @@ small = SirenConfig(hidden_features=32, hidden_layers=2)
 fs = siren_fn(small, siren_init(small, jax.random.PRNGKey(0)))
 xs = x[:, : small.in_features]
 t0 = time.perf_counter()
-auto = compile_gradient(fs, order=2, example_coords=xs, config="auto")
+auto = compile_gradient(fs, order=2, example_coords=xs, config="auto",
+                        store=store)
 print(f"autoconfig ({time.perf_counter() - t0:.1f}s): "
-      f"{auto.autoconfig.describe()}")
+      f"{auto.autoconfig.describe()} [provenance: {auto.provenance}]")
 
 # 4. serve: any batch size streams through the one jitted block pipeline
 q = jax.random.uniform(jax.random.PRNGKey(2), (1001, cfg.in_features),

@@ -85,6 +85,46 @@ class AutoConfigResult:
                 f"deadlock-rejected)")
 
 
+def result_as_dict(res: AutoConfigResult) -> dict:
+    """JSON-serializable form of a search record — persisted with the
+    artifact so a store-restored artifact keeps its autoconfig provenance."""
+    return {
+        "config": res.config.as_dict(),
+        "predicted_latency": res.predicted_latency,
+        "predicted_row_cycles": res.predicted_row_cycles,
+        "baseline_latency": res.baseline_latency,
+        "baseline_row_cycles": res.baseline_row_cycles,
+        "mm_segments": list(res.mm_segments),
+        "candidates": [
+            {"block": c.block,
+             "mm_parallel": [list(p) for p in c.mm_parallel],
+             "latency": c.latency, "row_cycles": c.row_cycles,
+             "deadlocked": c.deadlocked, "accepted": c.accepted}
+            for c in res.candidates],
+    }
+
+
+def result_from_dict(d: dict) -> AutoConfigResult:
+    """Inverse of ``result_as_dict``."""
+    return AutoConfigResult(
+        config=HardwareConfig.from_dict(d["config"]),
+        predicted_latency=int(d["predicted_latency"]),
+        predicted_row_cycles=int(d["predicted_row_cycles"]),
+        baseline_latency=int(d["baseline_latency"]),
+        baseline_row_cycles=int(d["baseline_row_cycles"]),
+        mm_segments=tuple(int(s) for s in d["mm_segments"]),
+        candidates=tuple(
+            Candidate(block=int(c["block"]),
+                      mm_parallel=tuple((int(s), int(p))
+                                        for s, p in c["mm_parallel"]),
+                      latency=int(c["latency"]),
+                      row_cycles=int(c["row_cycles"]),
+                      deadlocked=bool(c["deadlocked"]),
+                      accepted=bool(c["accepted"]))
+            for c in d["candidates"]),
+    )
+
+
 # ---------------------------------------------------------------------------
 # the analytic oracle
 # ---------------------------------------------------------------------------

@@ -120,6 +120,18 @@ class HardwareConfig:
             list(x) for x in self.mm_parallel_per_segment)
         return d
 
+    @classmethod
+    def from_dict(cls, d: dict) -> "HardwareConfig":
+        """Inverse of ``as_dict`` — the config <-> dict round trip the
+        artifact store relies on.  Unknown keys are ignored (forward
+        compatibility with store entries written by newer code)."""
+        fields = {f.name for f in dataclasses.fields(cls)}
+        kw = {k: v for k, v in d.items() if k in fields}
+        if kw.get("mm_parallel_per_segment") is not None:
+            kw["mm_parallel_per_segment"] = tuple(
+                (int(s), int(p)) for s, p in kw["mm_parallel_per_segment"])
+        return cls(**kw)
+
     def describe(self) -> str:
         ov = (f" +{len(self.mm_parallel_per_segment)} per-segment"
               if self.mm_parallel_per_segment else "")

@@ -77,6 +77,10 @@ class CompiledGradient:
         self.fn = fn                      # original INR fn (None via graph path)
         self.order = order
         self.autoconfig = autoconfig      # AutoConfigResult when config="auto"
+        self.provenance = "trace"         # "trace" | "store" (set on restore)
+        self.cache_hits = 0               # in-process hits served (metadata)
+        self._signature = None            # lazy architecture signature
+        self._stored_in: set[str] = set()  # store roots known to hold this
         self._dataflow: dict[tuple, dict] = {}
         self._decisions = {sid: kernel for sid, _, kernel in dispatch}
         self._streamed_outs = [o for o in graph.outputs
@@ -99,19 +103,32 @@ class CompiledGradient:
 
     # -- execution ---------------------------------------------------------
 
-    def _make_block_fn(self):
+    def resident_block_fn(self):
+        """The per-block pipeline parameterized by its resident environment:
+        ``f(res_env, *xblk) -> streamed outs``.  This is what the multi-INR
+        serving path vmaps over a stacked resident axis — the plan, dispatch
+        decisions, and block geometry are weight-independent, so ONE such
+        function serves every weight set of the architecture."""
         plan, g = self.plan, self.graph
-        decisions, res_env = self._decisions, self.residents
+        decisions = self._decisions
         block, B = self.config.block, plan.batch
         input_nodes = [g.nodes[i] for i in plan.inputs]
         streamed_outs = self._streamed_outs
 
-        def block_fn(*xblk):
+        def block_fn(res_env, *xblk):
             env = {n.id: xblk[_p(n, "idx")] for n in input_nodes}
             for seg in plan.segments:
                 env[seg.output] = _run_segment(plan, seg, decisions[seg.id],
                                                env, res_env, block, B)
             return tuple(env[o] for o in streamed_outs)
+        return block_fn
+
+    def _make_block_fn(self):
+        res_fn = self.resident_block_fn()
+        res_env = self.residents
+
+        def block_fn(*xblk):
+            return res_fn(res_env, *xblk)
         return block_fn
 
     def _make_chunk_fn(self):
@@ -231,15 +248,34 @@ class CompiledGradient:
             self._dataflow[key] = cached
         return cached
 
+    @property
+    def signature(self) -> str:
+        """Weight-independent architecture signature (graph structure +
+        order + resolved config) — the artifact store's canonical key.
+        Computed lazily and cached; store-restored artifacts carry the
+        signature they were stored under."""
+        if self._signature is None:
+            from repro.serve.store import arch_signature
+            self._signature = arch_signature(self.graph, self.order,
+                                             self.config)
+        return self._signature
+
     def describe(self) -> str:
         kernels = [k for _, _, k in self.dispatch if k != INTERPRET]
+        prov = self.provenance
+        if self.cache_hits:
+            prov += f" (+{self.cache_hits} in-process hits)"
         lines = [f"CompiledGradient(order={self.order}, "
                  f"config=[{self.config.describe()}]): "
                  f"{len(self.graph.nodes)} nodes, "
                  f"{len(self.plan.segments)} segments, "
                  f"{len(self.residents)} residents, "
                  f"{len(kernels)} Pallas-dispatched segments",
-                 self.plan.describe()]
+                 f"  provenance: {prov}",
+                 f"  signature: {self.signature}"]
+        if self.autoconfig is not None:
+            lines.append(f"  {self.autoconfig.describe()}")
+        lines.append(self.plan.describe())
         return "\n".join(lines)
 
 
@@ -303,7 +339,8 @@ def compile_from_graph(g: ComputeGraph, *,
 # ---------------------------------------------------------------------------
 
 _CACHE: dict[tuple, CompiledGradient] = {}
-_STATS = {"hits": 0, "misses": 0}
+_STATS = {"hits": 0, "misses": 0,
+          "store_hits": 0, "store_misses": 0, "store_puts": 0}
 
 
 def _fn_key(fn):
@@ -317,16 +354,33 @@ def _fn_key(fn):
 
 
 def compile_cache_info() -> dict:
+    """One view of EVERY compile-layer cache: the compile_gradient artifact
+    cache, the per-graph cache behind ``executor.streaming_executor``, the
+    per-artifact keyed ``dataflow_summary`` caches, the monotonic tracer
+    counter, and the artifact-store hit/miss/put accounting."""
+    from repro.core import executor, trace
+    artifacts = {id(cg): cg for cg in _CACHE.values()}
+    artifacts.update((id(cg), cg) for cg in executor._GRAPH_CACHE.values())
     return {"hits": _STATS["hits"], "misses": _STATS["misses"],
-            "size": len(_CACHE)}
+            "size": len(_CACHE),
+            "graph_cache_size": len(executor._GRAPH_CACHE),
+            "dataflow_summaries": sum(len(cg._dataflow)
+                                      for cg in artifacts.values()),
+            "traces": trace.TRACE_CALLS,
+            "store_hits": _STATS["store_hits"],
+            "store_misses": _STATS["store_misses"],
+            "store_puts": _STATS["store_puts"]}
 
 
 def clear_compile_cache() -> None:
-    """Drop every cached artifact: the compile_gradient cache AND the
-    per-graph cache behind executor.streaming_executor."""
+    """Drop every cached artifact: the compile_gradient cache, the per-graph
+    cache behind executor.streaming_executor, and (with them) every cached
+    per-artifact dataflow summary.  Store hit/miss accounting resets too;
+    the tracer counter is monotonic by design (tests measure deltas)."""
     from repro.core import executor
     _CACHE.clear()
-    _STATS["hits"] = _STATS["misses"] = 0
+    for k in _STATS:
+        _STATS[k] = 0
     executor._GRAPH_CACHE.clear()
 
 
@@ -350,7 +404,8 @@ def _trace_graph(fn, order: int, trace_b: int, shape, dtype) -> ComputeGraph:
 def compile_gradient(fn, order: int, example_coords, *,
                      config: HardwareConfig | str | None = None,
                      block: int | None = None,
-                     use_pallas: bool | None = None) -> CompiledGradient:
+                     use_pallas: bool | None = None,
+                     store=None) -> CompiledGradient:
     """The pipeline front door: compile-or-hit the full INR-Arch compiler for
     the ``order``-th gradient computation of INR ``fn``.
 
@@ -375,16 +430,26 @@ def compile_gradient(fn, order: int, example_coords, *,
     re-optimize, no re-plan.  The cache is keyed on the RESOLVED config, so
     distinct configs get distinct entries, and ``config="auto"`` shares its
     entry with an explicit request for whatever config it resolved to.
+
+    ``store`` (an ``serve.ArtifactStore`` or a directory path) adds the
+    DISK level, making this a three-level lookup: in-process cache -> store
+    -> trace+compile+persist.  A store hit rebuilds the artifact from the
+    persisted graph/config/weights without a single tracer invocation; a
+    miss compiles as usual and persists the result, so the NEXT replica
+    cold-starts warm.
     """
     shape = tuple(example_coords.shape)
     dtype = str(jnp.dtype(example_coords.dtype))
+    if store is not None:
+        from repro.serve.store import as_store
+        store = as_store(store)
 
     if isinstance(config, str):
         if config != "auto":
             raise ValueError(f"config must be a HardwareConfig, None, or "
                              f"'auto'; got {config!r}")
         return _compile_auto(fn, order, shape, dtype, block=block,
-                             use_pallas=use_pallas)
+                             use_pallas=use_pallas, store=store)
 
     cfg = as_hardware_config(config, block=block,
                              use_pallas=use_pallas).resolved()
@@ -396,22 +461,56 @@ def compile_gradient(fn, order: int, example_coords, *,
     hit = _CACHE.get(key)
     if hit is not None:
         _STATS["hits"] += 1
+        hit.cache_hits += 1
+        if store is not None and store.root not in hit._stored_in:
+            # a store handed in late still ends up populated — but a root
+            # this artifact is known to live in costs the hit path nothing
+            store.ensure(hit, request_key=_request_key(fn, order, trace_b,
+                                                       shape, dtype, cfg))
+            hit._stored_in.add(store.root)
         return hit
     _STATS["misses"] += 1
+
+    rk = None
+    if store is not None:
+        rk = _request_key(fn, order, trace_b, shape, dtype, cfg)
+        cg = store.restore_request(rk)
+        if cg is not None:
+            _STATS["store_hits"] += 1
+            if cg.fn is None:
+                cg.fn = fn
+            _CACHE[key] = cg
+            return cg
+        _STATS["store_misses"] += 1
 
     g = _trace_graph(fn, order, trace_b, shape, dtype)
     cg = compile_from_graph(g, config=cfg, fn=fn, order=order)
     _CACHE[key] = cg
+    if store is not None:
+        store.put(cg, request_key=rk)
+        cg._stored_in.add(store.root)
+        _STATS["store_puts"] += 1
     return cg
+
+
+def _request_key(fn, order, trace_b, shape, dtype, cfg):
+    """Disk-index key for one request (None when fn has no stable
+    cross-process fingerprint — the disk level is then skipped)."""
+    from repro.serve.store import request_key
+    return request_key(fn, order, (trace_b,) + tuple(shape[1:]), dtype,
+                       cfg.clamped(trace_b))
 
 
 def _compile_auto(fn, order: int, shape, dtype, *,
                   block: int | None = None,
-                  use_pallas: bool | None = None) -> CompiledGradient:
+                  use_pallas: bool | None = None,
+                  store=None) -> CompiledGradient:
     """config="auto": trace once, let autoconfig pick the HardwareConfig,
     compile with the winner, and cache under BOTH the auto request and the
     resolved config (so explicit requests for the winner hit the same
-    artifact)."""
+    artifact).  With a store, the auto request gets its own disk-index
+    binding — a replica restoring it skips the trace AND the search, and
+    the artifact carries the persisted AutoConfigResult."""
     from repro.core.autoconfig import resolve_config
 
     base = as_hardware_config(None, block=block,
@@ -424,8 +523,25 @@ def _compile_auto(fn, order: int, shape, dtype, *,
     hit = _CACHE.get(auto_key)
     if hit is not None:
         _STATS["hits"] += 1
+        hit.cache_hits += 1
         return hit
     _STATS["misses"] += 1
+
+    rk = None
+    if store is not None:
+        from repro.serve.store import request_key
+        rk = request_key(fn, order, (trace_b,) + tuple(shape[1:]), dtype,
+                         base, mode="auto")
+        cg = store.restore_request(rk)
+        if cg is not None:
+            _STATS["store_hits"] += 1
+            if cg.fn is None:
+                cg.fn = fn
+            _CACHE[auto_key] = cg
+            _CACHE[(_fn_key(fn), int(order), (trace_b,) + tuple(shape[1:]),
+                    dtype, cg.config)] = cg
+            return cg
+        _STATS["store_misses"] += 1
 
     g = _trace_graph(fn, order, trace_b, shape, dtype)
     plan = build_segment_plan(g)
@@ -444,4 +560,8 @@ def _compile_auto(fn, order: int, shape, dtype, *,
         # the default); share the artifact and attach the search record
         cg.autoconfig = result
     _CACHE[auto_key] = cg
+    if store is not None:
+        store.put(cg, request_key=rk)
+        cg._stored_in.add(store.root)
+        _STATS["store_puts"] += 1
     return cg

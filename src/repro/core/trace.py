@@ -107,8 +107,19 @@ def _inner_jaxpr(params):
     return None, []
 
 
+# monotonic tracer-invocation counter: the serving layer's warm-restore
+# guarantee is "zero tracer invocations", and tests/CI assert it by delta
+TRACE_CALLS = 0
+
+
+def trace_count() -> int:
+    return TRACE_CALLS
+
+
 def extract_graph(fn, *example_args, flatten_outputs=True) -> ComputeGraph:
     """Trace ``fn`` at the given example args and convert to ComputeGraph."""
+    global TRACE_CALLS
+    TRACE_CALLS += 1
     closed = jax.make_jaxpr(fn)(*example_args)
     g = ComputeGraph()
     env: dict = {}

@@ -37,7 +37,8 @@ def sharpen(img, amount: float = 1.0):
 def train_insp_head(siren_cfg: SirenConfig, insp_cfg: InspConfig,
                     siren_params, target_img, *, steps: int = 300,
                     lr: float = 1e-3, batch: int = 512, key=None,
-                    config=None, block: int | None = None, compiled=None):
+                    config=None, block: int | None = None, compiled=None,
+                    store=None):
     """Fit psi so INSP(features(x)) ~= target_img(x).  Returns (psi, mse).
 
     The gradient features of the (frozen) SIREN are what INR-Arch
@@ -45,7 +46,9 @@ def train_insp_head(siren_cfg: SirenConfig, insp_cfg: InspConfig,
     (or taken as the given ``compiled`` artifact) and streamed over the full
     coordinate grid up front — training then indexes the cached feature
     matrix instead of re-deriving gradients every step (the compile-once /
-    run-many serving discipline)."""
+    run-many serving discipline).  ``store`` threads through to the compile:
+    a populated artifact store lets a fresh process warm-start the feature
+    pipeline without re-tracing."""
     key = key if key is not None else jax.random.PRNGKey(0)
     res = target_img.shape[0]
     coords = image_coords(res)
@@ -54,7 +57,8 @@ def train_insp_head(siren_cfg: SirenConfig, insp_cfg: InspConfig,
     f = siren_fn(siren_cfg, siren_params)
     if compiled is None:
         feats_fn, compiled = compiled_feature_vector(
-            f, insp_cfg.grad_order, coords, config=config, block=block)
+            f, insp_cfg.grad_order, coords, config=config, block=block,
+            store=store)
     else:
         feats_fn = feature_vector(f, insp_cfg.grad_order, compiled=compiled)
     feats = feats_fn(coords)                 # one streamed pass, all pixels
@@ -85,7 +89,8 @@ def train_insp_head(siren_cfg: SirenConfig, insp_cfg: InspConfig,
 
 
 def edited_inr(siren_cfg: SirenConfig, insp_cfg: InspConfig, siren_params,
-               psi, *, compiled=None):
+               psi, *, compiled=None, store=None, example_coords=None,
+               config=None):
     """The composite 'edited' INR g(x) = INSP(features_f(x)) — the function
     whose computation graph INR-Arch compiles to hardware.
 
@@ -93,8 +98,19 @@ def edited_inr(siren_cfg: SirenConfig, insp_cfg: InspConfig, siren_params,
     is what ``extract_graph`` should trace.  With ``compiled`` (a
     CompiledGradient for f's gradients, e.g. from ``train_insp_head``'s
     compile or ``compiled_feature_vector``), g SERVES through the compiled
-    streaming pipeline — any batch size, no per-call re-derivation."""
+    streaming pipeline — any batch size, no per-call re-derivation.
+
+    ``store`` + ``example_coords`` compile-or-restore the feature pipeline
+    through the artifact store instead: repeated edits of the same SIREN
+    architecture (even across processes) skip re-compilation entirely."""
     f = siren_fn(siren_cfg, siren_params)
+    if compiled is None and store is not None:
+        if example_coords is None:
+            raise ValueError("edited_inr(store=...) needs example_coords "
+                             "to compile-or-restore the feature pipeline")
+        _, compiled = compiled_feature_vector(
+            f, insp_cfg.grad_order, example_coords, config=config,
+            store=store)
     feats = feature_vector(f, insp_cfg.grad_order, compiled=compiled)
 
     def g(x):

@@ -61,17 +61,20 @@ def feature_vector(f, order: int, *, compiled=None):
 
 def compiled_feature_vector(f, order: int, example_coords, *,
                             config=None, block: int | None = None,
-                            use_pallas: bool | None = None):
+                            use_pallas: bool | None = None, store=None):
     """Compile-or-hit the gradient pipeline for ``f`` and return
     ``(feats_fn, CompiledGradient)`` — the serving-path feature extractor.
 
     ``config`` is a ``HardwareConfig``, ``None`` (defaults), or ``"auto"``
     (autoconfig picks the hardware parameters); ``block`` / ``use_pallas``
-    are conveniences folded into it."""
+    are conveniences folded into it.  ``store`` (an
+    ``serve.ArtifactStore`` or path) adds the disk level of the lookup:
+    repeated edits across processes restore the artifact instead of
+    re-tracing the gradient graph."""
     from repro.core.pipeline import compile_gradient
 
     cg = compile_gradient(f, order, example_coords, config=config,
-                          block=block, use_pallas=use_pallas)
+                          block=block, use_pallas=use_pallas, store=store)
     return feature_vector(f, order, compiled=cg), cg
 
 

@@ -1,0 +1,30 @@
+"""repro.serve — persistent artifacts + multi-INR batched serving (DESIGN.md §6).
+
+INR-Arch's premise is compile-once / run-many: the compiler fixes the
+dataflow plan and hardware parameters ahead of time, so serving is pure
+streaming execution.  ``core.pipeline`` realizes the in-process half; this
+package is the deployment half:
+
+  * ``store``     — ArtifactStore: a CompiledGradient serialized to disk
+                    under a weight-independent ARCHITECTURE SIGNATURE and
+                    restored without re-tracing (cold-start = read + rebuild,
+                    never re-derive the gradient graph);
+  * ``multi_inr`` — MultiINRArtifact: many INRs of one architecture (same
+                    plan, different weights) batched through ONE compiled
+                    artifact by lifting residents to a stacked leading axis;
+  * ``engine``    — ServingEngine: the request-level front door — (inr_id,
+                    coords) queries grouped by artifact, padded/chunked
+                    through ``apply_batched``, optionally sharded across
+                    devices via ``distributed.sharding.ShardingPolicy``.
+"""
+
+from repro.serve.engine import ServingEngine
+from repro.serve.multi_inr import (MultiINRArtifact, bind_weights,
+                                   const_payload)
+from repro.serve.store import ArtifactStore, arch_signature, fn_fingerprint
+
+__all__ = [
+    "ArtifactStore", "arch_signature", "fn_fingerprint",
+    "MultiINRArtifact", "bind_weights", "const_payload",
+    "ServingEngine",
+]

@@ -1,0 +1,257 @@
+"""ServingEngine — the request-level front door of the serving stack.
+
+The store gives us warm artifacts and the multi-INR layer gives us batched
+execution; this module turns them into a serving loop:
+
+    engine = ServingEngine(store)
+    engine.register(inr_id, cg)            # persist + route, or
+    engine.register(inr_id, signature=..., weight_id=...)   # already stored
+    outs = engine.serve([(inr_id, coords), ...])
+
+``serve`` groups requests by architecture signature (one compiled artifact
+per group), concatenates each INR's query rows, and executes each group in
+ONE streaming pass: a single-INR group goes through the artifact's
+``apply_batched``; a group spanning several INRs goes through a
+``MultiINRArtifact`` (per-INR rows padded to a common block-multiple length
+— edge rows replicated, padding never reaches a caller).  Restored
+artifacts and multi-INR stacks are cached in-process, so steady-state
+serving never touches the tracer OR the disk.
+
+Sharding.  With a ``distributed.sharding.ShardingPolicy`` the engine
+device_puts each group's query batch against the policy's mesh — the batch
+(rows) axis is sharded across the data axes when divisible, and jit's SPMD
+partitioner splits the streaming pipeline accordingly (residents are
+replicated constants).  ``shard_chunking=True`` additionally gives each
+shard its own HardwareConfig: the serving chunk is scaled to the per-device
+slice (``chunk_blocks / n_devices``), compiled as a config variant of the
+same graph — ``compile_from_graph``, never a re-trace.  The variant applies
+to the single-INR ``apply_batched`` path only: the multi-INR path streams
+block-by-block with no chunk loop, so there is no chunk knob to scale
+(its batches are still sharded via the policy).
+"""
+
+from __future__ import annotations
+
+import math
+from collections import OrderedDict
+
+import jax
+import jax.numpy as jnp
+
+from repro.serve.multi_inr import MultiINRArtifact, const_payload, pad_rows
+from repro.serve.store import ArtifactStore, as_store
+
+
+class ServingEngine:
+    def __init__(self, store: "ArtifactStore | str | None" = None, *,
+                 sharding=None, shard_chunking: bool = False):
+        self.store = as_store(store)
+        self.sharding = sharding            # distributed.sharding.ShardingPolicy
+        self.shard_chunking = bool(shard_chunking)
+        self._routes: dict[str, tuple[str, str]] = {}   # inr_id -> (sig, wid)
+        self._artifacts: dict[str, object] = {}         # sig -> CompiledGradient
+        self._base_wid: dict[str, str] = {}             # sig -> base weight id
+        self._variants: dict[tuple, object] = {}        # (sig, n_dev) -> variant
+        self._payloads: dict[tuple[str, str], dict] = {}
+        self._multi: dict[tuple, MultiINRArtifact] = {}
+        self.stats = {"requests": 0, "rows": 0, "padded_rows": 0,
+                      "groups": 0, "multi_groups": 0, "restores": 0,
+                      "sharded_batches": 0}
+
+    # -- registration ------------------------------------------------------
+
+    def register(self, inr_id: str, cg=None, *, signature: str | None = None,
+                 weight_id: str | None = None) -> tuple[str, str]:
+        """Route ``inr_id`` to an artifact.  With ``cg``, the artifact is
+        persisted to the store (when one is attached) and kept in-process;
+        without it, (signature, weight_id) must name an existing store
+        entry."""
+        if cg is not None:
+            wid = weight_id or inr_id
+            if self.store is not None:
+                sig = self.store.put(cg, inr_id=wid)
+            else:
+                sig = cg.signature
+            if sig not in self._artifacts:
+                self._artifacts[sig] = cg
+                self._base_wid[sig] = wid
+            self._payloads[(sig, wid)] = const_payload(cg)
+        else:
+            if signature is None:
+                raise ValueError("register needs an artifact or a signature")
+            sig = signature
+            wid = weight_id or inr_id
+            if self.store is None:
+                raise ValueError("signature-only registration needs a store")
+            if not self.store.has(sig, wid):
+                raise KeyError(f"store has no weights {wid!r} under {sig}")
+        self._routes[inr_id] = (sig, wid)
+        return sig, wid
+
+    def registered(self) -> list[str]:
+        return sorted(self._routes)
+
+    # -- artifact / payload resolution (in-process, then store) ------------
+
+    def _artifact(self, sig: str):
+        cg = self._artifacts.get(sig)
+        if cg is None:
+            if self.store is None:
+                raise KeyError(f"unknown signature {sig} and no store")
+            cg = self.store.load(sig)
+            self._artifacts[sig] = cg
+            self._base_wid[sig] = self.store.meta(sig)["default_weights"]
+            self.stats["restores"] += 1
+        return cg
+
+    def _payload(self, sig: str, wid: str) -> dict:
+        p = self._payloads.get((sig, wid))
+        if p is None:
+            if self.store is None:
+                raise KeyError(f"unknown weights {wid!r} and no store")
+            p = self.store.load_weights(sig, wid)
+            self._payloads[(sig, wid)] = p
+        return p
+
+    def _multi_artifact(self, sig: str, wids: tuple[str, ...]):
+        key = (sig, wids)
+        m = self._multi.get(key)
+        if m is None:
+            base = self._artifact(sig)
+            m = MultiINRArtifact(base, [self._payload(sig, w) for w in wids],
+                                 list(wids))
+            self._multi[key] = m
+        return m
+
+    # -- sharding ----------------------------------------------------------
+
+    def _n_devices(self) -> int:
+        if self.sharding is None:
+            return 1
+        return math.prod(self.sharding.mesh.shape.values())
+
+    def _place(self, coords, batch_axis: int):
+        """Shard the rows axis across the policy's mesh (replicate when the
+        axis does not divide); jit partitions the pipeline to match."""
+        if self.sharding is None or self._n_devices() == 1:
+            return coords
+        from jax.sharding import NamedSharding
+        logical = [None] * coords.ndim
+        logical[batch_axis] = "batch"
+        spec = self.sharding.act_spec(coords.shape, tuple(logical))
+        placed = jax.device_put(coords, NamedSharding(self.sharding.mesh,
+                                                      spec))
+        if spec != jax.sharding.PartitionSpec():
+            self.stats["sharded_batches"] += 1
+        return placed
+
+    def _serving_artifact(self, sig: str):
+        """The artifact a single-INR group executes: the base, or — under
+        ``shard_chunking`` — a per-shard-config variant compiled from the
+        SAME graph (chunk scaled to the per-device slice; no re-trace)."""
+        cg = self._artifact(sig)
+        n = self._n_devices()
+        if not self.shard_chunking or n == 1:
+            return cg
+        key = (sig, n)
+        variant = self._variants.get(key)
+        if variant is None:
+            from repro.core.pipeline import compile_from_graph
+            shard_cfg = cg.config.replace(
+                chunk_blocks=max(1, cg.config.chunk_blocks // n))
+            if shard_cfg == cg.config:
+                variant = cg
+            else:
+                variant = compile_from_graph(cg.graph, config=shard_cfg,
+                                             order=cg.order,
+                                             emit_source=False)
+            self._variants[key] = variant
+        return variant
+
+    # -- serving -----------------------------------------------------------
+
+    def serve(self, requests):
+        """Execute a batch of ``(inr_id, coords)`` queries; returns one
+        output tuple per request, in request order."""
+        requests = list(requests)
+        self.stats["requests"] += len(requests)
+        results: list = [None] * len(requests)
+
+        # group rows by inr_id (concatenating multiple requests per INR),
+        # then inr_ids by signature — one artifact execution per signature
+        per_inr: "OrderedDict[str, list]" = OrderedDict()
+        for k, (inr_id, coords) in enumerate(requests):
+            if inr_id not in self._routes:
+                raise KeyError(f"unregistered inr_id {inr_id!r}")
+            per_inr.setdefault(inr_id, []).append(
+                (k, jnp.asarray(coords)))
+        by_sig: "OrderedDict[str, list[str]]" = OrderedDict()
+        for inr_id in per_inr:
+            sig, _ = self._routes[inr_id]
+            by_sig.setdefault(sig, []).append(inr_id)
+
+        for sig, inr_ids in by_sig.items():
+            self.stats["groups"] += 1
+            coords_per_inr = {
+                i: (jnp.concatenate([c for _, c in per_inr[i]])
+                    if len(per_inr[i]) > 1 else per_inr[i][0][1])
+                for i in inr_ids}
+            if len(inr_ids) == 1:
+                outs = {inr_ids[0]: self._serve_single(
+                    sig, inr_ids[0], coords_per_inr[inr_ids[0]])}
+            else:
+                outs = self._serve_multi(sig, inr_ids, coords_per_inr)
+            for inr_id in inr_ids:
+                row = 0
+                for k, c in per_inr[inr_id]:
+                    n = c.shape[0]
+                    results[k] = tuple(o[row:row + n]
+                                       for o in outs[inr_id])
+                    row += n
+        return results
+
+    def _serve_single(self, sig: str, inr_id: str, coords):
+        _, wid = self._routes[inr_id]
+        cg = self._serving_artifact(sig)
+        self.stats["rows"] += int(coords.shape[0])
+        self.stats["padded_rows"] += (-int(coords.shape[0])) % cg.config.block
+        if wid != self._base_wid.get(sig):
+            # not the base artifact's weight set: run the K=1 multi path
+            # with this INR's payload (resident swap, no recompilation)
+            m = self._multi_artifact(sig, (wid,))
+            outs = m.apply_batched(self._place(coords[None], 1))
+            return tuple(o[0] for o in outs)
+        return cg.apply_batched(self._place(coords, 0))
+
+    def _serve_multi(self, sig: str, inr_ids, coords_per_inr):
+        self.stats["multi_groups"] += 1
+        wids = tuple(self._routes[i][1] for i in inr_ids)
+        m = self._multi_artifact(sig, wids)
+        block = m.base.config.block
+        counts = [int(coords_per_inr[i].shape[0]) for i in inr_ids]
+        n_max = max(counts)
+        n_pad = n_max + (-n_max) % block
+        batch = jnp.stack([pad_rows(coords_per_inr[i], n_pad)
+                           for i in inr_ids])            # [K, n_pad, ...]
+        self.stats["rows"] += sum(counts)
+        self.stats["padded_rows"] += n_pad * len(counts) - sum(counts)
+        outs = m.apply_batched(self._place(batch, 1))    # each [K, n_pad, ...]
+        return {i: tuple(o[k, :counts[k]] for o in outs)
+                for k, i in enumerate(inr_ids)}
+
+    # -- introspection -----------------------------------------------------
+
+    def describe(self) -> str:
+        n_dev = self._n_devices()
+        lines = [f"ServingEngine: {len(self._routes)} INRs over "
+                 f"{len(self._artifacts)} in-process artifacts "
+                 f"({len(self._multi)} multi-INR stacks), "
+                 f"store={'yes' if self.store is not None else 'no'}, "
+                 f"devices={n_dev}"
+                 + (f" [per-shard chunking]" if self.shard_chunking
+                    and n_dev > 1 else ""),
+                 f"  stats: {self.stats}"]
+        for inr_id in sorted(self._routes):
+            sig, wid = self._routes[inr_id]
+            lines.append(f"  {inr_id} -> {sig} / {wid}")
+        return "\n".join(lines)

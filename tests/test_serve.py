@@ -1,0 +1,388 @@
+"""serve/ subsystem: store round-trip fidelity, signature semantics,
+no-trace restore, multi-INR batched parity, engine grouping, and the
+unified cache bookkeeping."""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core.trace as T
+from repro.configs.siren import SirenConfig
+from repro.core import pipeline as P
+from repro.core.config import DEFAULT_CONFIG, HardwareConfig
+from repro.inr.siren import siren_fn, siren_init
+from repro.serve import (ArtifactStore, MultiINRArtifact, ServingEngine,
+                         arch_signature, bind_weights, fn_fingerprint)
+
+
+@pytest.fixture(autouse=True)
+def fresh_cache():
+    P.clear_compile_cache()
+    yield
+    P.clear_compile_cache()
+
+
+@pytest.fixture(scope="module")
+def siren16():
+    cfg = SirenConfig(hidden_features=16, hidden_layers=1)
+    params = siren_init(cfg, jax.random.PRNGKey(0))
+    f = siren_fn(cfg, params)
+    x = jax.random.uniform(jax.random.PRNGKey(1),
+                           (16, cfg.in_features), jnp.float32, -1, 1)
+    return cfg, params, f, x
+
+
+# ---------------------------------------------------------------------------
+# signature + fingerprint semantics
+# ---------------------------------------------------------------------------
+
+def test_signature_is_weight_independent(siren16):
+    cfg, params, f, x = siren16
+    f2 = siren_fn(cfg, siren_init(cfg, jax.random.PRNGKey(7)))
+    a = P.compile_gradient(f, 1, x)
+    b = P.compile_gradient(f2, 1, x)
+    assert a is not b
+    assert a.signature == b.signature, \
+        "same architecture, different weights -> same signature"
+    assert arch_signature(a.graph, 1, a.config) == a.signature
+
+    # order, config, and architecture all change the signature
+    c = P.compile_gradient(f, 2, x)
+    assert c.signature != a.signature
+    d = P.compile_gradient(f, 1, x, block=4)
+    assert d.signature != a.signature
+    wider = SirenConfig(hidden_features=32, hidden_layers=1)
+    e = P.compile_gradient(siren_fn(wider, siren_init(
+        wider, jax.random.PRNGKey(0))), 1, x)
+    assert e.signature != a.signature
+
+
+def test_fn_fingerprint_tracks_weights_not_identity(siren16):
+    cfg, params, f, x = siren16
+    # a NEW closure over the SAME weights fingerprints identically (this is
+    # what lets a fresh process hit the disk index)
+    assert fn_fingerprint(f) == fn_fingerprint(siren_fn(cfg, params))
+    f2 = siren_fn(cfg, siren_init(cfg, jax.random.PRNGKey(7)))
+    assert fn_fingerprint(f) != fn_fingerprint(f2)
+
+
+def test_fn_fingerprint_sees_module_globals():
+    """A changed module-level constant or helper must change the key — a
+    stale index hit would silently restore wrong numerics."""
+    import types
+    mod = types.ModuleType("fp_probe")
+    exec("G = 1.0\ndef f(x):\n    return x * G\n", mod.__dict__)
+    before = fn_fingerprint(mod.f)
+    mod.G = 2.0
+    assert before is not None and fn_fingerprint(mod.f) != before
+
+
+def test_config_dict_round_trip():
+    cfg = HardwareConfig(block=16, chunk_blocks=8, mm_parallel=32,
+                         mm_parallel_per_segment=((3, 64), (1, 8)),
+                         use_pallas=False, fifo_alpha=0.02)
+    assert HardwareConfig.from_dict(cfg.as_dict()) == cfg
+    assert HardwareConfig.from_dict(DEFAULT_CONFIG.as_dict()) == DEFAULT_CONFIG
+    # unknown keys from a newer writer are ignored
+    d = cfg.as_dict()
+    d["future_knob"] = 7
+    assert HardwareConfig.from_dict(d) == cfg
+
+
+# ---------------------------------------------------------------------------
+# store round-trip
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("order", [1, 2, 3])
+def test_store_round_trip_is_numerically_identical(siren16, tmp_path, order):
+    cfg, params, f, x = siren16
+    store = ArtifactStore(tmp_path / "store")
+    cg = P.compile_gradient(f, order, x, store=store)
+    q = jax.random.uniform(jax.random.PRNGKey(3 + order),
+                           (13, cfg.in_features), jnp.float32, -1, 1)
+    want = cg.apply_batched(q)               # 13 rows: not a block multiple
+
+    P.clear_compile_cache()
+    restored = ArtifactStore(tmp_path / "store").load(cg.signature)
+    assert restored.provenance == "store"
+    assert restored.order == order
+    assert restored.config == cg.config
+    assert restored.source == cg.source, "persisted source restored verbatim"
+    got = restored.apply_batched(q)
+    assert len(got) == len(want)
+    for a, b in zip(want, got):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_restore_never_invokes_the_tracer(siren16, tmp_path, monkeypatch):
+    cfg, params, f, x = siren16
+    store = ArtifactStore(tmp_path / "store")
+    cg = P.compile_gradient(f, 2, x, store=store)
+    sig = cg.signature
+    P.clear_compile_cache()
+
+    before = T.trace_count()
+    monkeypatch.setattr(T, "extract_graph", lambda *a, **k: pytest.fail(
+        "tracer invoked during store restore"))
+    restored = ArtifactStore(tmp_path / "store").load(sig)
+    restored.apply_batched(x[:5])
+    assert T.trace_count() == before
+
+
+def test_three_level_lookup(siren16, tmp_path):
+    cfg, params, f, x = siren16
+    store = ArtifactStore(tmp_path / "store")
+    cg = P.compile_gradient(f, 2, x, store=store)
+    assert cg.provenance == "trace"
+    info = P.compile_cache_info()
+    assert info["store_misses"] == 1 and info["store_puts"] == 1
+
+    # level 1: in-process hit (same object, no store traffic)
+    assert P.compile_gradient(f, 2, x, store=store) is cg
+    assert P.compile_cache_info()["store_hits"] == 0
+
+    # level 2: disk hit in a "fresh replica" (cleared in-process cache, a
+    # new closure over the same weights, a new store handle)
+    P.clear_compile_cache()
+    t0 = T.trace_count()
+    f_replica = siren_fn(cfg, params)
+    cg2 = P.compile_gradient(f_replica, 2, x,
+                             store=ArtifactStore(tmp_path / "store"))
+    assert cg2.provenance == "store"
+    assert cg2.signature == cg.signature
+    assert T.trace_count() == t0, "disk hit must not trace"
+    assert P.compile_cache_info()["store_hits"] == 1
+    # ... and the restored artifact now serves in-process hits
+    assert P.compile_gradient(f_replica, 2, x) is cg2
+
+
+def test_store_round_trip_preserves_autoconfig(siren16, tmp_path):
+    cfg, params, f, x = siren16
+    store = ArtifactStore(tmp_path / "store")
+    cg = P.compile_gradient(f, 2, x, config="auto", store=store)
+    assert cg.autoconfig is not None
+    P.clear_compile_cache()
+    t0 = T.trace_count()
+    cg2 = P.compile_gradient(siren_fn(cfg, params), 2, x, config="auto",
+                             store=ArtifactStore(tmp_path / "store"))
+    assert cg2.provenance == "store"
+    assert T.trace_count() == t0, "auto disk hit skips trace AND search"
+    res, res2 = cg.autoconfig, cg2.autoconfig
+    assert res2.config == res.config
+    assert res2.predicted_row_cycles == res.predicted_row_cycles
+    assert len(res2.candidates) == len(res.candidates)
+
+
+def test_describe_reports_provenance_and_signature(siren16, tmp_path):
+    cfg, params, f, x = siren16
+    store = ArtifactStore(tmp_path / "store")
+    cg = P.compile_gradient(f, 2, x, store=store)
+    P.compile_gradient(f, 2, x)
+    d = cg.describe()
+    assert "provenance: trace (+1 in-process hits)" in d
+    assert f"signature: {cg.signature}" in d
+    P.clear_compile_cache()
+    d2 = ArtifactStore(tmp_path / "store").load(cg.signature).describe()
+    assert "provenance: store" in d2
+    auto = P.compile_gradient(f, 1, x, config="auto")
+    assert "autoconfig:" in auto.describe()
+
+
+def test_unified_cache_info_covers_every_cache(siren16):
+    from repro.core import executor as ex
+    from repro.core.passes import optimize
+    from repro.core.trace import extract_graph
+    from repro.inr.gradnet import paper_gradients
+
+    cfg, params, f, x = siren16
+    info0 = P.compile_cache_info()
+    assert info0["size"] == 0 and info0["graph_cache_size"] == 0
+    assert info0["dataflow_summaries"] == 0
+
+    cg = P.compile_gradient(f, 1, x)
+    cg.dataflow_summary()
+    cg.dataflow_summary(mm_parallel=64)
+    g = extract_graph(paper_gradients(f, 1, cfg.out_features,
+                                      cfg.in_features), x)
+    optimize(g)
+    ex.streaming_executor(g, block=8, use_pallas=False)
+    info = P.compile_cache_info()
+    assert info["size"] == 1
+    assert info["graph_cache_size"] == 1
+    assert info["dataflow_summaries"] == 2
+    assert info["traces"] > info0["traces"]
+
+    P.clear_compile_cache()
+    info2 = P.compile_cache_info()
+    assert info2["size"] == 0 and info2["graph_cache_size"] == 0
+    assert info2["dataflow_summaries"] == 0
+    assert info2["traces"] == info["traces"], "tracer counter is monotonic"
+
+
+# ---------------------------------------------------------------------------
+# multi-INR batching
+# ---------------------------------------------------------------------------
+
+def test_multi_inr_matches_per_inr_serving(siren16, tmp_path):
+    cfg, _, _, x = siren16
+    K = 8
+    params = [siren_init(cfg, jax.random.PRNGKey(100 + k)) for k in range(K)]
+    fns = [siren_fn(cfg, p) for p in params]
+    store = ArtifactStore(tmp_path / "store")
+    base = P.compile_gradient(fns[0], 2, x, store=store)
+    sig = base.signature
+    for k in range(K):
+        store.put_weights(sig, f"inr{k}",
+                          bind_weights(base, params[0], params[k]))
+
+    # one STORED artifact serves all K weight sets
+    multi = MultiINRArtifact.from_store(store, sig,
+                                        [f"inr{k}" for k in range(K)])
+    q = jax.random.uniform(jax.random.PRNGKey(9),
+                           (13, cfg.in_features), jnp.float32, -1, 1)
+    outs = multi.apply_batched(q)            # broadcast to all K INRs
+    for k in range(K):
+        want = P.compile_gradient(fns[k], 2, x).apply_batched(q)
+        for a, b in zip(want, outs):
+            assert b.shape == (K,) + a.shape
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b[k]),
+                                       rtol=1e-5, atol=1e-6)
+
+    # per-INR coordinate sets (stacked) agree too
+    qk = jax.random.uniform(jax.random.PRNGKey(10),
+                            (K, 11, cfg.in_features), jnp.float32, -1, 1)
+    outs_k = multi.apply_batched(qk)
+    for k in range(K):
+        want = P.compile_gradient(fns[k], 2, x).apply_batched(qk[k])
+        for a, b in zip(want, outs_k):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b[k]),
+                                       rtol=1e-5, atol=1e-6)
+
+
+def test_bind_weights_rejects_mismatched_pytrees(siren16):
+    cfg, params, f, x = siren16
+    base = P.compile_gradient(f, 1, x)
+    other = SirenConfig(hidden_features=32, hidden_layers=1)
+    with pytest.raises(ValueError):
+        bind_weights(base, params, siren_init(other, jax.random.PRNGKey(1)))
+
+
+# ---------------------------------------------------------------------------
+# the serving engine
+# ---------------------------------------------------------------------------
+
+def test_engine_groups_and_preserves_request_order(siren16, tmp_path):
+    cfg, _, _, x = siren16
+    small = SirenConfig(hidden_features=8, hidden_layers=1)
+    params = [siren_init(cfg, jax.random.PRNGKey(k)) for k in range(3)]
+    fns = [siren_fn(cfg, p) for p in params]
+    g_other = siren_fn(small, siren_init(small, jax.random.PRNGKey(5)))
+
+    engine = ServingEngine(tmp_path / "store")
+    for k in range(3):
+        engine.register(f"inr{k}", P.compile_gradient(fns[k], 2, x))
+    engine.register("other", P.compile_gradient(g_other, 2, x))
+
+    q = jax.random.uniform(jax.random.PRNGKey(11),
+                           (19, cfg.in_features), jnp.float32, -1, 1)
+    reqs = [("inr1", q[:5]), ("other", q), ("inr0", q[:13]),
+            ("inr1", q[5:]), ("inr2", q[:7])]
+    results = engine.serve(reqs)
+    assert len(results) == len(reqs)
+    for (inr_id, c), out in zip(reqs, results):
+        f_ = g_other if inr_id == "other" else fns[int(inr_id[3:])]
+        want = P.compile_gradient(f_, 2, x).apply_batched(c)
+        for a, b in zip(want, out):
+            assert a.shape == b.shape
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, atol=1e-6)
+    # two signatures -> two groups; the 3-INR group went multi
+    assert engine.stats["groups"] == 2
+    assert engine.stats["multi_groups"] == 1
+    assert engine.stats["requests"] == 5
+
+
+def test_engine_serves_zero_row_requests_in_multi_groups(siren16, tmp_path):
+    cfg, params, _, x = siren16
+    f0 = siren_fn(cfg, params)
+    f1 = siren_fn(cfg, siren_init(cfg, jax.random.PRNGKey(21)))
+    engine = ServingEngine(tmp_path / "store")
+    engine.register("a", P.compile_gradient(f0, 1, x))
+    engine.register("b", P.compile_gradient(f1, 1, x))
+    q = jax.random.uniform(jax.random.PRNGKey(22),
+                           (9, cfg.in_features), jnp.float32, -1, 1)
+    out_empty, out_b = engine.serve([("a", q[:0]), ("b", q)])
+    assert all(o.shape[0] == 0 for o in out_empty)
+    want = P.compile_gradient(f1, 1, x).apply_batched(q)
+    for u, v in zip(want, out_b):
+        np.testing.assert_allclose(np.asarray(u), np.asarray(v),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_engine_cold_starts_from_store_alone(siren16, tmp_path):
+    cfg, _, _, x = siren16
+    params = [siren_init(cfg, jax.random.PRNGKey(k)) for k in range(2)]
+    fns = [siren_fn(cfg, p) for p in params]
+    writer = ServingEngine(tmp_path / "store")
+    sig = None
+    for k in range(2):
+        sig, _ = writer.register(f"inr{k}", P.compile_gradient(fns[k], 2, x))
+    q = jax.random.uniform(jax.random.PRNGKey(12),
+                           (9, cfg.in_features), jnp.float32, -1, 1)
+    want = writer.serve([("inr0", q), ("inr1", q)])
+
+    P.clear_compile_cache()
+    t0 = T.trace_count()
+    replica = ServingEngine(tmp_path / "store")
+    for k in range(2):
+        replica.register(f"inr{k}", signature=sig, weight_id=f"inr{k}")
+    got = replica.serve([("inr0", q), ("inr1", q)])
+    assert T.trace_count() == t0, "replica serving must not trace"
+    assert replica.stats["restores"] == 1
+    for a, b in zip(want, got):
+        for u, v in zip(a, b):
+            np.testing.assert_array_equal(np.asarray(u), np.asarray(v))
+
+
+def test_engine_sharding_policy_parity(siren16, tmp_path):
+    """A 1-device mesh exercises the sharded code path (placement + the
+    per-shard-config variant machinery) and must be a numeric no-op; the
+    multi-device behavior is the same code under SPMD partitioning."""
+    from jax.sharding import Mesh
+    from repro.distributed.sharding import ShardingPolicy
+
+    cfg, _, f, x = siren16
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    plain = ServingEngine(tmp_path / "s1")
+    sharded = ServingEngine(tmp_path / "s2", sharding=ShardingPolicy(mesh),
+                            shard_chunking=True)
+    cg = P.compile_gradient(f, 2, x)
+    plain.register("a", cg)
+    sharded.register("a", cg)
+    q = jax.random.uniform(jax.random.PRNGKey(13),
+                           (33, cfg.in_features), jnp.float32, -1, 1)
+    a = plain.serve([("a", q)])[0]
+    b = sharded.serve([("a", q)])[0]
+    for u, v in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(u), np.asarray(v))
+
+
+# ---------------------------------------------------------------------------
+# fresh-process restore (the acceptance-criterion path, via the CI gate)
+# ---------------------------------------------------------------------------
+
+def test_fresh_subprocess_restores_without_tracing():
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(repo, "src")
+    r = subprocess.run([sys.executable,
+                        os.path.join(repo, "scripts", "serve_smoke.py")],
+                       capture_output=True, text=True, env=env, timeout=420)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "0 traces" in r.stdout
+    assert "serve smoke OK" in r.stdout
