@@ -2,7 +2,7 @@
 
 PY ?= python
 
-.PHONY: test test-fast serve-smoke bench bench-segments bench-pipeline bench-autotune bench-serve bench-json
+.PHONY: test test-fast serve-smoke bench bench-segments bench-regions bench-regions-check bench-pipeline bench-autotune bench-serve bench-json
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -18,6 +18,12 @@ bench:
 
 bench-segments:
 	PYTHONPATH=src $(PY) -m benchmarks.run segments
+
+bench-regions:
+	PYTHONPATH=src $(PY) -m benchmarks.run regions
+
+bench-regions-check:
+	PYTHONPATH=src $(PY) -m benchmarks.run regions --check
 
 bench-pipeline:
 	PYTHONPATH=src $(PY) -m benchmarks.run pipeline

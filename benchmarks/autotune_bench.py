@@ -42,9 +42,11 @@ def run(hidden: int = 32, layers: int = 2, n_queries: int = 512):
         for a, b in zip(default.apply_batched(q), auto.apply_batched(q)):
             np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
 
+        # step delays are calibrated in row-cycles (dataflow.OP_ROW_COST),
+        # so the longest path IS the row-cycle count — no normalization
         lat_default = predicted_latency(default.graph, default.config,
                                         plan=default.plan)
-        rc_default = lat_default * default.config.dataflow_block
+        rc_default = lat_default
         emit(f"autotune/order{order}/predicted_default_row_cycles",
              rc_default,
              f"latency_steps={lat_default} config=default",

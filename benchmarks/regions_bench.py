@@ -1,0 +1,96 @@
+"""Fused-region block pipeline: dispatches, HBM traffic, wall time.
+
+The tentpole claim of the region scheduler (DESIGN.md §7) is measurable
+three ways, and this benchmark reports all of them for the SIREN gradient
+workload at orders 1-3, fused vs unfused:
+
+  * KERNEL DISPATCHES per block step — one megakernel per fused region vs
+    one Pallas call per segment;
+  * PER-BLOCK HBM BYTES — the analytic traffic model from ``core/regions``
+    (region inputs/outputs only vs every inter-segment tensor);
+  * END-TO-END WALL TIME of ``apply_batched`` on the same host.
+
+With ``--json --check`` (``benchmarks/run.py``), the dispatch counts and
+predicted HBM bytes are gated against ``results/regions_baseline.json`` —
+deterministic compiler outputs, so any regression is a real scheduling
+regression, not timing noise (wall time is reported but never gated).
+"""
+
+from repro.core import pipeline as P
+from repro.core.config import HardwareConfig
+from repro.core.regions import (region_hbm_bytes_per_block,
+                                segment_hbm_bytes_per_block)
+
+from benchmarks.common import emit, time_fn
+
+# gated metrics (see check()): compiler-deterministic, timing-free
+GATED_SUFFIXES = ("dispatches_fused", "hbm_block_fused")
+
+
+def run(hidden: int = 64, layers: int = 2, orders=(1, 2, 3)):
+    import jax
+
+    from repro.configs.siren import SirenConfig
+    from repro.inr.siren import siren_fn, siren_init
+
+    cfg = SirenConfig(hidden_features=hidden, hidden_layers=layers)
+    params = siren_init(cfg, jax.random.PRNGKey(0))
+    f = siren_fn(cfg, params)
+    import jax.numpy as jnp
+    x = jax.random.uniform(jax.random.PRNGKey(1),
+                           (cfg.batch, cfg.in_features), jnp.float32, -1, 1)
+
+    fused_cfg = HardwareConfig(block=8, use_pallas=True, fuse_regions=True)
+    unfused_cfg = HardwareConfig(block=8, use_pallas=True,
+                                 fuse_regions=False)
+
+    for order in orders:
+        cg_f = P.compile_gradient(f, order, x, config=fused_cfg)
+        cg_u = P.compile_gradient(f, order, x, config=unfused_cfg)
+        block = cg_f.config.block
+
+        n_f, n_u = len(cg_f.dispatch), len(cg_u.dispatch)
+        emit(f"regions/o{order}_dispatches_fused", n_f,
+             f"{len(cg_f.region_plan.fused_regions())} fused regions over "
+             f"{len(cg_f.plan.segments)} segments",
+             dispatches=n_f, segments=len(cg_f.plan.segments))
+        emit(f"regions/o{order}_dispatches_unfused", n_u,
+             f"per-segment; reduction={n_u / max(n_f, 1):.1f}x",
+             dispatches=n_u)
+
+        hbm_f = region_hbm_bytes_per_block(cg_f.plan, cg_f.region_plan,
+                                           block)
+        hbm_u = segment_hbm_bytes_per_block(cg_u.plan, block)
+        emit(f"regions/o{order}_hbm_block_fused", hbm_f,
+             f"bytes/block; region inputs+outputs only", hbm_bytes=hbm_f)
+        emit(f"regions/o{order}_hbm_block_unfused", hbm_u,
+             f"bytes/block; every segment boundary; "
+             f"reduction={hbm_u / max(hbm_f, 1):.1f}x", hbm_bytes=hbm_u)
+
+        us_f = time_fn(cg_f.apply, x)
+        us_u = time_fn(cg_u.apply, x)
+        emit(f"regions/o{order}_wall_fused", us_f,
+             f"apply, {jax.default_backend()}; vs_unfused="
+             f"{us_u / max(us_f, 1e-9):.2f}x",
+             config=cg_f.config.as_dict())
+        emit(f"regions/o{order}_wall_unfused", us_u, "apply, per-segment",
+             config=cg_u.config.as_dict())
+
+
+def check(current: list[dict], baseline: dict) -> list[str]:
+    """Regression gate for ``--check``: dispatch counts and predicted HBM
+    bytes must not exceed the committed baseline.  Returns failure strings
+    (empty = pass)."""
+    base = {r["name"]: r for r in baseline.get("results", [])}
+    failures = []
+    for rec in current:
+        if not any(rec["name"].endswith(s) for s in GATED_SUFFIXES):
+            continue
+        b = base.get(rec["name"])
+        if b is None:
+            continue                       # new metric: nothing to gate
+        if rec["us_per_call"] > b["us_per_call"]:
+            failures.append(
+                f"{rec['name']}: {rec['us_per_call']:.0f} regressed vs "
+                f"baseline {b['us_per_call']:.0f}")
+    return failures

@@ -15,18 +15,33 @@ space (DESIGN.md §5): ``resolve_config(graph, plan)`` searches
 using the existing dataflow longest-path latency model (``DataflowGraph``)
 as the analytic cost oracle.  Candidates whose deadlock analysis flags a
 cycle under safe (naive full-stream) FIFO depths are REJECTED outright; the
-winner is re-verified deadlock-free before it is returned.  Latencies at
-different block granules are compared in ROW-CYCLES (block-steps x rows per
-block), which is granularity-invariant for the regular access patterns these
-kernels produce.
+winner is re-verified deadlock-free before it is returned.  Since the
+dataflow step delays are CALIBRATED in row-cycles (``dataflow.OP_ROW_COST``:
+per-block delay = block x per-row op cost), latencies at different block
+granules compare directly — the longest path IS the row-cycle count.
+
+On top of the block x MM-parallelism search, the region scheduler adds two
+dimensions (DESIGN.md §7):
+
+  * FUSED vs UNFUSED and the REGION CUT POINTS — the unfused base config is
+    always scored (the winner is never worse than it), and the greedy cut
+    refinement tries forcing a region boundary at each fused-region-internal
+    segment, keeping cuts the oracle rewards;
+  * the Pallas TILE SHAPE (``bm`` x ``bn``) — analytically neutral in the
+    block-granular oracle, so it is searched only under the ``measure``
+    hook, re-ranking tile variants of the winner by real wall time.
 
 The search is deterministic — greedy steepest-descent over a finite ladder —
 so a given graph always resolves to the same config, and the compile cache
 (keyed on the resolved config) stays coherent.
 
 An optional ``measure`` hook refines the analytic choice with on-device
-microbenchmark timings: given a callable ``config -> seconds``, the block
+timings: given a callable ``config -> seconds``, the block and tile-shape
 candidates of the analytic winner are re-ranked by measured wall time.
+``make_apply_batched_measure`` builds the standard hook — it compiles each
+candidate config (no re-trace) and times the artifact's real
+``apply_batched`` serving path; ``compile_gradient(config="auto")`` feeds it
+in by default on TPU.
 """
 
 from __future__ import annotations
@@ -44,6 +59,12 @@ from repro.core.segment import (FUSED_MM_ACT, MATMUL, SegmentPlan,
 # granule candidates (must divide the plan batch)
 MM_LADDER = (8, 16, 32, 64)
 BLOCK_CANDIDATES = (8, 16, 32, 64)
+# Pallas tile-shape ladder searched under the measure hook; (bm, bn) —
+# the current tile leads so that measurement ties keep it
+TILE_LADDER = ((128, 128), (256, 128), (128, 256), (256, 256), (512, 128))
+# greedy region-cut refinement bound (each accepted cut costs one more
+# oracle sweep over the remaining boundaries)
+MAX_REGION_CUTS = 4
 
 
 @dataclass(frozen=True)
@@ -51,10 +72,12 @@ class Candidate:
     """One scored point of the search space."""
     block: int
     mm_parallel: tuple[tuple[int, int], ...]   # (segment id, parallelism)
-    latency: int                               # oracle block-step latency
-    row_cycles: int                            # latency * block (comparable)
+    latency: int                               # oracle longest path
+    row_cycles: int                            # == latency (calibrated costs)
     deadlocked: bool
     accepted: bool
+    fused: bool = True                         # config.fuse_regions
+    region_cuts: tuple[int, ...] = ()          # config.region_cuts
 
 
 @dataclass(frozen=True)
@@ -99,7 +122,8 @@ def result_as_dict(res: AutoConfigResult) -> dict:
             {"block": c.block,
              "mm_parallel": [list(p) for p in c.mm_parallel],
              "latency": c.latency, "row_cycles": c.row_cycles,
-             "deadlocked": c.deadlocked, "accepted": c.accepted}
+             "deadlocked": c.deadlocked, "accepted": c.accepted,
+             "fused": c.fused, "region_cuts": list(c.region_cuts)}
             for c in res.candidates],
     }
 
@@ -120,7 +144,10 @@ def result_from_dict(d: dict) -> AutoConfigResult:
                       latency=int(c["latency"]),
                       row_cycles=int(c["row_cycles"]),
                       deadlocked=bool(c["deadlocked"]),
-                      accepted=bool(c["accepted"]))
+                      accepted=bool(c["accepted"]),
+                      fused=bool(c.get("fused", True)),
+                      region_cuts=tuple(int(s)
+                                        for s in c.get("region_cuts", ())))
             for c in d["candidates"]),
     )
 
@@ -173,6 +200,7 @@ def resolve_config(g: ComputeGraph, plan: SegmentPlan | None = None,
                    mm_budget: int | None = None,
                    block_candidates: tuple[int, ...] = BLOCK_CANDIDATES,
                    mm_ladder: tuple[int, ...] = MM_LADDER,
+                   tile_ladder: tuple = TILE_LADDER,
                    measure=None) -> AutoConfigResult:
     """Pick the HardwareConfig for ``g`` with the dataflow latency oracle.
 
@@ -182,10 +210,15 @@ def resolve_config(g: ComputeGraph, plan: SegmentPlan | None = None,
     config's uniform allocation (``base.mm_parallel`` x number of MM
     segments), i.e. the same silicon redistributed to the critical path.
     ``measure``, if given, is a callable ``HardwareConfig -> seconds`` used
-    to re-rank the analytic winner's block candidates by real timings.
+    to re-rank the analytic winner's block and tile-shape (``bm``/``bn``)
+    candidates by real timings (``make_apply_batched_measure`` builds the
+    standard hook from the artifact's serving path).
 
-    The returned config always scores <= the base config on the oracle, and
-    is verified deadlock-free; every scored point is in ``.candidates``.
+    The search covers block granule x per-MM-segment parallelism x region
+    fusion (fused base, UNFUSED base, and greedy region-cut refinement of
+    the winner).  The returned config never scores worse than the base
+    config OR its unfused variant on the oracle, and is verified
+    deadlock-free; every scored point is in ``.candidates``.
     """
     if plan is None:
         plan = build_segment_plan(g)
@@ -200,14 +233,17 @@ def resolve_config(g: ComputeGraph, plan: SegmentPlan | None = None,
         # memoized: the greedy ladder revisits configs (e.g. the winner is
         # re-scored at acceptance); each unique point costs one oracle call
         key = (config.dataflow_block, config.mm_parallel,
-               config.mm_parallel_per_segment)
+               config.mm_parallel_per_segment, config.fuse_regions,
+               config.region_cuts)
         c = seen.get(key)
         if c is None:
             dead, lat = _oracle(g, plan, config)
             c = Candidate(block=config.dataflow_block,
                           mm_parallel=config.mm_parallel_per_segment,
-                          latency=lat, row_cycles=lat * config.dataflow_block,
-                          deadlocked=dead, accepted=False)
+                          latency=lat, row_cycles=lat,
+                          deadlocked=dead, accepted=False,
+                          fused=config.fuse_regions,
+                          region_cuts=config.region_cuts)
             seen[key] = c
             log.append(c)
         return c
@@ -216,6 +252,13 @@ def resolve_config(g: ComputeGraph, plan: SegmentPlan | None = None,
     if base_cand.deadlocked:
         raise ValueError("base config deadlocks under naive safe FIFO "
                          "depths; no baseline to improve on")
+    # the unfused default is the floor the winner must never fall below —
+    # unless it deadlocks, in which case the fused base stands in (only
+    # deadlock-free candidates may ever be chosen or set the floor)
+    unfused_base = base.replace(fuse_regions=False, region_cuts=())
+    unfused_cand = score(unfused_base) if base.fuse_regions else base_cand
+    if unfused_cand.deadlocked:
+        unfused_base, unfused_cand = base, base_cand
 
     def finish(chosen: HardwareConfig) -> AutoConfigResult:
         final = score(chosen)
@@ -249,11 +292,26 @@ def resolve_config(g: ComputeGraph, plan: SegmentPlan | None = None,
         if best is None or key < (best[0], best[1]):
             best = (cand.row_cycles, blk, cfg)
 
-    if best is None or best[0] > base_cand.row_cycles:
-        # the search never beats the baseline: keep the base config
-        chosen = base
+    floor = min(base_cand.row_cycles, unfused_cand.row_cycles)
+    if best is None or best[0] > floor:
+        # the search never beats the baselines: keep the better base
+        chosen = base if base_cand.row_cycles <= unfused_cand.row_cycles \
+            else unfused_base
     else:
         chosen = best[2]
+
+    if chosen.fuse_regions:
+        chosen = _refine_region_cuts(plan, chosen, score)
+
+    if measure is not None:
+        # each unique config is timed at most once across both re-ranks
+        timed_cache: dict[HardwareConfig, float] = {}
+
+        def timed(cfg: HardwareConfig) -> float:
+            t = timed_cache.get(cfg)
+            if t is None:
+                t = timed_cache[cfg] = measure(cfg)
+            return t
 
     if measure is not None and len(blocks) > 1:
         # on-device refinement: same MM allocation, re-rank block granules
@@ -265,9 +323,48 @@ def resolve_config(g: ComputeGraph, plan: SegmentPlan | None = None,
                     for b in blocks]
         safe = [v for v in variants if not score(v).deadlocked]
         if safe:
-            chosen = min(safe, key=lambda v: (measure(v), v.block))
+            chosen = min(safe, key=lambda v: (timed(v), v.block))
+    if measure is not None and len(tile_ladder) > 1:
+        # tile shapes are invisible to the block-granular oracle: searched
+        # purely by measurement; the current tile is listed first so a
+        # wall-time tie keeps it
+        tiles = [(chosen.bm, chosen.bn)]
+        tiles += [t for t in tile_ladder if t != tiles[0]]
+        variants = [chosen.replace(bm=bm_, bn=bn_) for bm_, bn_ in tiles]
+        best_i = min(range(len(variants)),
+                     key=lambda i: (timed(variants[i]), i))
+        chosen = variants[best_i]
 
     return finish(chosen)
+
+
+def _refine_region_cuts(plan: SegmentPlan, chosen: HardwareConfig,
+                        score) -> HardwareConfig:
+    """Greedy region-cut refinement: try forcing a region boundary at each
+    segment internal to a fused region of the current schedule; keep the cut
+    that most reduces the oracle latency, repeat (bounded) while improving.
+    Deterministic — ties break toward the lowest segment id."""
+    from repro.core.regions import build_region_plan
+    cur = score(chosen)
+    for _ in range(MAX_REGION_CUTS):
+        rplan = build_region_plan(plan, chosen)
+        boundaries = [sid for r in rplan.fused_regions()
+                      for sid in r.segments[:-1]]
+        best_step = None                   # (latency, sid, config, cand)
+        for sid in boundaries:
+            trial = chosen.replace(
+                region_cuts=chosen.region_cuts + (sid,))
+            cand = score(trial)
+            if cand.deadlocked:
+                continue
+            if cand.latency < cur.latency and (
+                    best_step is None
+                    or (cand.latency, sid) < (best_step[0], best_step[1])):
+                best_step = (cand.latency, sid, trial, cand)
+        if best_step is None:
+            return chosen
+        _, _, chosen, cur = best_step
+    return chosen
 
 
 def _allocate_mm(base: HardwareConfig, blk: int, mm_segs, budget: int,
@@ -314,6 +411,45 @@ def _allocate_mm(base: HardwareConfig, blk: int, mm_segs, budget: int,
             return to_config(alloc), cur
         _, sid, nxt, cur = best_step
         alloc[sid] = nxt
+
+
+# ---------------------------------------------------------------------------
+# the standard measure hook: real apply_batched timings
+# ---------------------------------------------------------------------------
+
+def make_apply_batched_measure(g: ComputeGraph,
+                               plan: SegmentPlan | None = None, *,
+                               rows: int | None = None,
+                               warmup: int = 1, iters: int = 3):
+    """Build a ``measure`` hook that compiles each candidate config (back
+    half of the compiler only — no re-trace) and times the artifact's REAL
+    ``apply_batched`` serving path on a synthetic batch, feeding measured
+    wall time back into the search.  ``compile_gradient(config="auto")``
+    passes this hook by default on TPU."""
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    if plan is None:
+        plan = build_segment_plan(g)
+    inp = g.nodes[plan.inputs[0]]
+    n = rows if rows is not None else (plan.batch or inp.shape[0])
+    coords = jnp.zeros((n,) + tuple(inp.shape[1:]), inp.dtype)
+
+    def measure(config: HardwareConfig) -> float:
+        from repro.core.pipeline import compile_from_graph
+        cg = compile_from_graph(g, config=config, plan=plan,
+                                emit_source=False)
+        for _ in range(max(1, warmup)):
+            jax.block_until_ready(cg.apply_batched(coords))
+        times = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            jax.block_until_ready(cg.apply_batched(coords))
+            times.append(time.perf_counter() - t0)
+        return sorted(times)[len(times) // 2]
+    return measure
 
 
 # ---------------------------------------------------------------------------

@@ -85,17 +85,11 @@ def _seg_fn_name(seg) -> str:
     return f"seg{seg.id}_{seg.kind.lower()}"
 
 
-def _emit_segment(L, g: ComputeGraph, plan: SegmentPlan, seg, B: int):
-    """One function per segment: streams in, one tensor out."""
-    params = ", ".join(["_r"] + [f"v{i}" for i in seg.stream_inputs])
-    ops = "+".join(g.nodes[n].op for n in seg.nodes)
-    kernel = segment_dispatch(plan, seg)
-    L.append(f"def {_seg_fn_name(seg)}({params}):")
-    L.append(f'    """{seg.kind}: {ops} -> n{seg.output} '
-             f'[dispatch: {kernel}]."""')
-    blk_ref = f"v{seg.stream_inputs[0]}"
-    node_set = set(seg.nodes)
-    for nid in seg.nodes:
+def _emit_nodes(L, g: ComputeGraph, plan: SegmentPlan, nodes, node_set,
+                blk_ref: str, B: int):
+    """Emit one ``v{nid} = ...`` line per IR node (shared by the segment and
+    region emitters)."""
+    for nid in nodes:
         n = g.nodes[nid]
         args = []
         for i in n.inputs:
@@ -108,7 +102,41 @@ def _emit_segment(L, g: ComputeGraph, plan: SegmentPlan, seg, B: int):
                 a = f"{a}[:{blk_ref}.shape[0]]"
             args.append(a)
         L.append(f"    v{nid} = {_expr(n, args)}")
+
+
+def _emit_segment(L, g: ComputeGraph, plan: SegmentPlan, seg, B: int):
+    """One function per segment: streams in, one tensor out."""
+    params = ", ".join(["_r"] + [f"v{i}" for i in seg.stream_inputs])
+    ops = "+".join(g.nodes[n].op for n in seg.nodes)
+    kernel = segment_dispatch(plan, seg)
+    L.append(f"def {_seg_fn_name(seg)}({params}):")
+    L.append(f'    """{seg.kind}: {ops} -> n{seg.output} '
+             f'[dispatch: {kernel}]."""')
+    blk_ref = f"v{seg.stream_inputs[0]}"
+    _emit_nodes(L, g, plan, seg.nodes, set(seg.nodes), blk_ref, B)
     L.append(f"    return v{seg.output}")
+    L.append("")
+
+
+def _region_fn_name(region) -> str:
+    return f"region{region.id}"
+
+
+def _emit_region(L, g: ComputeGraph, plan: SegmentPlan, region, B: int):
+    """One function per FUSED region: the megakernel's source analogue —
+    every member segment inlined, intermediates never leave the function,
+    streams in, the region's outputs out."""
+    params = ", ".join(["_r"] + [f"v{i}" for i in region.stream_inputs])
+    segs = "+".join(f"s{s}" for s in region.segments)
+    L.append(f"def {_region_fn_name(region)}({params}):")
+    L.append(f'    """FusedRegion {segs}: one megakernel, intermediates '
+             f'in VMEM [dispatch: region]."""')
+    blk_ref = f"v{region.stream_inputs[0]}"
+    nodes = [n for sid in region.segments
+             for n in plan.segments[sid].nodes]
+    _emit_nodes(L, g, plan, nodes, set(nodes), blk_ref, B)
+    outs = ", ".join(f"v{o}" for o in region.outputs)
+    L.append(f"    return ({outs},)")
     L.append("")
 
 
@@ -116,17 +144,28 @@ def emit_python(g: ComputeGraph, *, block: int | None = None,
                 name: str = "generated",
                 depths: dict | None = None,
                 plan: SegmentPlan | None = None,
-                config: HardwareConfig | None = None) -> str:
+                config: HardwareConfig | None = None,
+                region_plan=None) -> str:
     """Emit a Python/JAX module implementing the optimized graph, one
-    function per SegmentPlan segment.  The emitted source records the
-    HardwareConfig it was compiled for (``HARDWARE_CONFIG``), the way the
-    paper's generated HLS bakes in its configured hardware parameters."""
+    function per execution unit: fused regions (when the config enables the
+    region scheduler) become one function each — the source analogue of the
+    region megakernel — and every remaining segment keeps its own function.
+    The region structure follows the SCHEDULE (``config.fuse_regions``),
+    independent of ``use_pallas``: an interpreted artifact's source still
+    shows the fusion the plan describes, just as it always named the Pallas
+    kernels it did not dispatch (see core/regions.py).  The emitted source
+    records the HardwareConfig it was compiled for (``HARDWARE_CONFIG``),
+    the way the paper's generated HLS bakes in its configured hardware
+    parameters."""
     if plan is None:
         plan = build_segment_plan(g, config=config)
     if config is None:
         config = plan.config
     if block is None:
         block = config.block if config is not None else 8
+    if region_plan is None and config is not None and config.fuse_regions:
+        from repro.core.regions import build_region_plan
+        region_plan = build_region_plan(plan, config)
     order = g.topo_order()
     B = plan.batch
     consts = [nid for nid in order
@@ -136,6 +175,10 @@ def emit_python(g: ComputeGraph, *, block: int | None = None,
     L.append(f'"""Auto-generated by repro.core.codegen — INR-Arch pipeline.')
     L.append(f'graph: {len(g.nodes)} nodes / {g.n_edges} edges;')
     L.append(f'plan: {len(plan.segments)} segments {plan.counts_by_kind()};')
+    if region_plan is not None and region_plan.fused_regions():
+        c = region_plan.counts()
+        L.append(f'regions: {c["regions"]} units, {c["fused"]} fused '
+                 f'covering {c["segments_fused"]} segments;')
     if config is not None:
         L.append(f'hardware config: {config.describe()}')
     if depths is not None:
@@ -173,22 +216,36 @@ def emit_python(g: ComputeGraph, *, block: int | None = None,
     L.append(f"_RESIDENT_IDS = {tuple(rlist)}")
     L.append("")
 
-    # one function per segment — the stream-kernel library for this graph
-    for seg in plan.segments:
-        _emit_segment(L, g, plan, seg, B)
+    # one function per execution unit — the stream-kernel library for this
+    # graph: fused regions inline their member segments (DESIGN.md §7)
+    units = (region_plan.units() if region_plan is not None
+             else [("seg", s) for s in plan.segments])
+    for kind, u in units:
+        if kind == "region":
+            _emit_region(L, g, plan, u, B)
+        else:
+            _emit_segment(L, g, plan, u, B)
 
-    # per-block wiring: calls segment functions in plan (topological) order.
+    # per-block wiring: calls unit functions in plan (topological) order.
     # resident (const-derived) outputs never stream — pipeline() returns
     # them straight from resident memory, as the dataflow mapping models
     streamed_outs = [o for o in g.outputs if o not in plan.resident]
     L.append("def pipeline_step(res, *xblk):")
-    L.append('    """One pipeline step: wire every segment over one block."""')
+    L.append('    """One pipeline step: wire every unit over one block."""')
     L.append("    _r = dict(zip(_RESIDENT_IDS, res))")
     for nid in plan.inputs:
         L.append(f"    v{nid} = xblk[{_p(g.nodes[nid], 'idx')}]")
-    for seg in plan.segments:
-        args = ", ".join(["_r"] + [f"v{i}" for i in seg.stream_inputs])
-        L.append(f"    v{seg.output} = {_seg_fn_name(seg)}({args})")
+
+    for kind, u in units:
+        if kind == "region":
+            args = ", ".join(["_r"] + [f"v{i}" for i in u.stream_inputs])
+            outs_l = ", ".join(f"v{o}" for o in u.outputs)
+            L.append(f"    {outs_l}, = {_region_fn_name(u)}({args})"
+                     if len(u.outputs) == 1 else
+                     f"    {outs_l} = {_region_fn_name(u)}({args})")
+        else:
+            args = ", ".join(["_r"] + [f"v{i}" for i in u.stream_inputs])
+            L.append(f"    v{u.output} = {_seg_fn_name(u)}({args})")
     outs = ", ".join(f"v{o}" for o in streamed_outs)
     L.append(f"    return ({outs},)")
     L.append("")

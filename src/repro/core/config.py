@@ -49,6 +49,21 @@ class HardwareConfig:
     * ``use_pallas``       — Pallas kernel dispatch; ``None`` = auto (TPU).
     * ``fifo_alpha``       — FIFO-depth optimization latency budget (the
                              paper's 1%).
+    * ``bm`` / ``bn``      — Pallas tile shape: rows / columns per kernel
+                             grid step (the MXU/VPU tile the stream kernels
+                             and the region megakernel block on); part of
+                             the autoconfig search space.
+    * ``fuse_regions``     — enable the region scheduler: adjacent
+                             expressible segments merge into FusedRegions
+                             executed as one Pallas megakernel with
+                             intermediates held in VMEM (DESIGN.md §7).
+    * ``vmem_budget``      — VMEM bytes a fused region's working set may
+                             occupy (inputs + weights + live intermediates
+                             + outputs at the ``bm`` tile); region growth
+                             stops at this budget.
+    * ``region_cuts``      — segment ids after which a region is forced to
+                             end — explicit cut points (what autoconfig
+                             searches on top of the greedy scheduler).
     """
 
     block: int = 8
@@ -58,9 +73,15 @@ class HardwareConfig:
     mm_parallel_per_segment: tuple[tuple[int, int], ...] = ()
     use_pallas: bool | None = None
     fifo_alpha: float = 0.01
+    bm: int = 128
+    bn: int = 128
+    fuse_regions: bool = True
+    vmem_budget: int = 8 * 1024 * 1024
+    region_cuts: tuple[int, ...] = ()
 
     def __post_init__(self):
-        for name in ("block", "chunk_blocks", "dataflow_block", "mm_parallel"):
+        for name in ("block", "chunk_blocks", "dataflow_block", "mm_parallel",
+                     "bm", "bn", "vmem_budget"):
             v = getattr(self, name)
             if not isinstance(v, int) or v <= 0:
                 raise ValueError(f"HardwareConfig.{name} must be a positive "
@@ -76,6 +97,10 @@ class HardwareConfig:
                 raise ValueError(f"mm_parallel override for segment {s} must "
                                  f"be positive, got {p}")
         object.__setattr__(self, "mm_parallel_per_segment", norm)
+        cuts = tuple(sorted({int(s) for s in self.region_cuts}))
+        if any(s < 0 for s in cuts):
+            raise ValueError(f"region_cuts must be segment ids, got {cuts}")
+        object.__setattr__(self, "region_cuts", cuts)
 
     # -- queries -----------------------------------------------------------
 
@@ -118,6 +143,7 @@ class HardwareConfig:
         d = dataclasses.asdict(self)
         d["mm_parallel_per_segment"] = list(
             list(x) for x in self.mm_parallel_per_segment)
+        d["region_cuts"] = list(self.region_cuts)
         return d
 
     @classmethod
@@ -130,15 +156,20 @@ class HardwareConfig:
         if kw.get("mm_parallel_per_segment") is not None:
             kw["mm_parallel_per_segment"] = tuple(
                 (int(s), int(p)) for s, p in kw["mm_parallel_per_segment"])
+        if kw.get("region_cuts") is not None:
+            kw["region_cuts"] = tuple(int(s) for s in kw["region_cuts"])
         return cls(**kw)
 
     def describe(self) -> str:
         ov = (f" +{len(self.mm_parallel_per_segment)} per-segment"
               if self.mm_parallel_per_segment else "")
+        cuts = f" cuts={list(self.region_cuts)}" if self.region_cuts else ""
         return (f"block={self.block} chunk_blocks={self.chunk_blocks} "
                 f"dataflow_block={self.dataflow_block} "
                 f"mm_parallel={self.mm_parallel}{ov} "
-                f"use_pallas={self.use_pallas} fifo_alpha={self.fifo_alpha}")
+                f"use_pallas={self.use_pallas} fifo_alpha={self.fifo_alpha} "
+                f"bm={self.bm} bn={self.bn} "
+                f"fuse_regions={self.fuse_regions}{cuts}")
 
 
 DEFAULT_CONFIG = HardwareConfig()

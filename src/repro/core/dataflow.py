@@ -20,6 +20,17 @@ TPU adaptation: FIFO granularity is a BLOCK of the array stream (default 64
 elements = the paper's batch dimension) rather than one scalar per cycle —
 see DESIGN.md §2.  The analysis itself is granularity-invariant for the
 regular access patterns these kernels produce.
+
+Step delays are CALIBRATED in row-cycles: a block step charges
+``block x per-row cost`` from the ``OP_ROW_COST`` table below (elementwise 1,
+transcendental 2, MM ``ceil(K / parallelism)`` per emitted row), so latencies
+at different block granules are directly comparable — no post-hoc row-cycle
+normalization (the quantity autoconfig minimizes IS the longest path).
+
+With a RegionPlan (``core/regions.py``), fused regions map to ONE process
+each: intra-region tensors get no FIFO at all (they live in the megakernel's
+VMEM values — the on-chip streams of the paper's FIFO-connected PEs), and the
+region charges the sum of its member segments' row costs per block step.
 """
 
 from __future__ import annotations
@@ -31,8 +42,47 @@ from repro.core.config import HardwareConfig
 from repro.core.graph import ComputeGraph, Node
 # op taxonomy lives with the SegmentPlan now; re-exported for compatibility
 from repro.core.segment import (BUFFERING, BUFFERING_OPS, FUSED_MM_ACT,
-                                MATMUL, MM_OPS, STREAMING_OPS, SegmentPlan,
-                                build_segment_plan)
+                                MATMUL, MM_OPS, STREAMING_OPS, STREAM_CHAIN,
+                                SegmentPlan, build_segment_plan)
+
+# ---------------------------------------------------------------------------
+# calibrated per-op block-step costs (row-cycles per streamed row).
+#
+# The paper's HLS kernels are pipelined at II=1 per element for elementwise
+# streams; transcendentals (sin/cos/exp/...) occupy the deeper VPU pipeline,
+# measured at ~2x an add/mul on the TPU interpret + jnp microbenchmarks the
+# kernels_bench suite times.  MM emits one output row every
+# ``ceil(K / parallelism)`` cycles (the paper's DSP initiation interval).
+# Ops missing from the table cost 1.  Buffering moves are charged 1 per row.
+# ---------------------------------------------------------------------------
+
+OP_ROW_COST = {
+    "Sin": 2, "Cos": 2, "Exp": 2, "Log": 2, "Tanh": 2, "Sigmoid": 2,
+    "Erf": 2, "Rsqrt": 2, "Sqrt": 2, "Pow": 2, "IntPow": 1,
+}
+
+
+def op_row_cost(op: str) -> int:
+    return OP_ROW_COST.get(op, 1)
+
+
+def segment_row_cost(plan: SegmentPlan, seg, mm_parallel: int) -> int:
+    """Row-cycles one segment charges per streamed row: the sum of its ops'
+    calibrated costs; MM segments add the initiation interval
+    ``ceil(K / mm_parallel)`` for the contraction."""
+    g = plan.graph
+    if seg.kind in (MATMUL, FUSED_MM_ACT):
+        mm = g.nodes[seg.meta.get("mm", seg.nodes[0])]
+        lhs = g.nodes[mm.inputs[0]]
+        kk = lhs.shape[-1] if lhs.shape else 1
+        cost = max(1, math.ceil(kk / max(1, mm_parallel)))
+        for nid in seg.nodes:
+            if g.nodes[nid].op not in MM_OPS:
+                cost += op_row_cost(g.nodes[nid].op)
+        return cost
+    if seg.kind == STREAM_CHAIN:
+        return sum(op_row_cost(g.nodes[n].op) for n in seg.nodes)
+    return 1                                   # buffering: one move per row
 
 
 @dataclass
@@ -85,7 +135,8 @@ def _n_blocks(node: Node, block: int) -> int:
 def map_to_dataflow(g: ComputeGraph, *, block: int | None = None,
                     mm_parallel: int | None = None, dtype_bytes: int = 4,
                     plan: SegmentPlan | None = None,
-                    config: HardwareConfig | None = None) -> DataflowDesign:
+                    config: HardwareConfig | None = None,
+                    region_plan=None) -> DataflowDesign:
     """Map a SegmentPlan onto the dataflow architecture.
 
     Processes and streams are derived from the SAME plan the executor runs
@@ -93,6 +144,12 @@ def map_to_dataflow(g: ComputeGraph, *, block: int | None = None,
     stream kernel), one array stream per inter-segment tensor USE, plus
     Input sources, copy_stream multicasters for fan-out, and output sinks.
     Intra-segment tensors never touch a FIFO — they live in the kernel.
+
+    With a region plan (built automatically when ``config.fuse_regions``),
+    the mapping is REGION-granular: each fused region is one process, its
+    intra-region FIFO edges collapse to zero-cost on-chip streams (no FIFO
+    exists for them), and the region charges its members' summed row cost
+    per block step (DESIGN.md §7).
 
     Hardware parameters resolve in precedence order: explicit ``block`` /
     ``mm_parallel`` kwargs (a uniform override, what the table sweeps use) >
@@ -104,6 +161,9 @@ def map_to_dataflow(g: ComputeGraph, *, block: int | None = None,
         config = plan.config
     if block is None:
         block = config.dataflow_block if config is not None else 64
+    if region_plan is None and config is not None and config.fuse_regions:
+        from repro.core.regions import build_region_plan
+        region_plan = build_region_plan(plan, config)
 
     def seg_mm_parallel(seg) -> int:
         if mm_parallel is not None:
@@ -111,6 +171,14 @@ def map_to_dataflow(g: ComputeGraph, *, block: int | None = None,
         if config is not None:
             return config.mm_parallel_for(seg.id)
         return seg.meta.get("mm_parallel") or 64
+
+    # execution units: fused regions are ONE process; everything else is a
+    # per-segment process exactly as before
+    if region_plan is not None:
+        units = region_plan.units()
+    else:
+        units = [("seg", s) for s in plan.segments]
+
     streams: dict[int, Stream] = {}
     procs: list[Process] = []
     sid = 0
@@ -123,20 +191,29 @@ def map_to_dataflow(g: ComputeGraph, *, block: int | None = None,
         sid += 1
         return s.id
 
-    # every USE of a produced tensor outside its segment gets its own stream
+    def unit_node_order(kind, u) -> list[int]:
+        if kind == "seg":
+            return list(u.nodes)
+        return [n for sid_ in u.segments for n in plan.segments[sid_].nodes]
+
+    def unit_outputs(kind, u) -> list[int]:
+        return [u.output] if kind == "seg" else list(u.outputs)
+
+    # every USE of a produced tensor outside its unit gets its own stream
     # (the paper's one-producer-one-consumer rule); uses are keyed so each
-    # consuming (segment, node, slot) / sink occurrence is distinct
+    # consuming (unit, node, slot) / sink occurrence is distinct
     use_lists: dict[int, list[tuple]] = {}     # tensor node -> ordered uses
-    seg_uses: dict[int, list[tuple]] = {s.id: [] for s in plan.segments}
-    for seg in plan.segments:
-        node_set = set(seg.nodes)
-        for nid in seg.nodes:
+    unit_uses: dict[int, list[tuple]] = {k: [] for k in range(len(units))}
+    for uid, (kind, u) in enumerate(units):
+        order_nodes = unit_node_order(kind, u)
+        node_set = set(order_nodes)
+        for nid in order_nodes:
             for slot, i in enumerate(g.nodes[nid].inputs):
                 if i in plan.resident or i in node_set:
                     continue               # residents are on-chip, not FIFOs
-                key = ("seg", seg.id, nid, slot)
+                key = ("unit", uid, nid, slot)
                 use_lists.setdefault(i, []).append(key)
-                seg_uses[seg.id].append(key)
+                unit_uses[uid].append(key)
     # dedupe can leave the same node as MULTIPLE graph outputs (e.g.
     # symmetric mixed partials) — each occurrence needs a stream.  Resident
     # (const-derived) outputs never flow through a FIFO: the host reads them
@@ -169,7 +246,7 @@ def map_to_dataflow(g: ComputeGraph, *, block: int | None = None,
                 cp.steps.append(Step(reads=((s_in, i),), delay=0))
                 for o in outs:
                     cp.steps.append(Step(writes=((o, i),), delay=0))
-            cp.steps.append(Step(delay=1))
+            cp.steps.append(Step(delay=block))
             procs.append(cp)
 
     # Input sources feed the pipeline
@@ -180,48 +257,71 @@ def map_to_dataflow(g: ComputeGraph, *, block: int | None = None,
         p = Process(f"Input{nid}")
         s = producer_stream[nid]
         for i in range(_n_blocks(node, block)):
-            p.steps.append(Step(writes=((s, i),), delay=1))
+            p.steps.append(Step(writes=((s, i),), delay=block))
         procs.append(p)
 
-    # one process per segment
-    for seg in plan.segments:
-        ins = [use_stream[k] for k in seg_uses[seg.id]]
-        out_s = producer_stream.get(seg.output)
-        outs = [out_s] if out_s is not None else []
-        out_node = g.nodes[seg.output]
-        nb_out = _n_blocks(out_node, block)
+    # one process per unit (segment, or fused region)
+    for uid, (kind, u) in enumerate(units):
+        ins = [use_stream[k] for k in unit_uses[uid]]
+        out_streams: list[tuple[int, int]] = []     # (stream, n_blocks)
+        for o in unit_outputs(kind, u):
+            out_s = producer_stream.get(o)
+            if out_s is not None:
+                out_streams.append((out_s, _n_blocks(g.nodes[o], block)))
+        nbs = [streams[s].n_blocks for s in ins]
+
+        if kind == "region":
+            # fused region: ONE streaming process — block i in, block i out,
+            # per-block delay = summed member row costs x block rows.  The
+            # megakernel holds intra-region tensors in VMEM, so they have no
+            # streams at all (they were never in use_lists).
+            cost = sum(segment_row_cost(plan, plan.segments[sid_],
+                                        seg_mm_parallel(plan.segments[sid_]))
+                       for sid_ in u.segments)
+            p = Process(f"region{u.id}")
+            nb_out_max = max((nb for _, nb in out_streams), default=0)
+            nb = max([nb_out_max] + nbs)
+            for i in range(nb):
+                rd = tuple((s, i) for s, b in zip(ins, nbs) if i < b)
+                wr = tuple((s, i) for s, b in out_streams if i < b)
+                p.steps.append(Step(reads=rd, writes=wr, delay=block * cost))
+            if p.steps:
+                procs.append(p)
+            continue
+
+        seg = u
+        outs = [s for s, _ in out_streams]
+        nb_out = out_streams[0][1] if out_streams \
+            else _n_blocks(g.nodes[seg.output], block)
         name = "+".join(g.nodes[n].op for n in seg.nodes) + str(seg.nodes[0])
         p = Process(name)
-        nbs = [streams[s].n_blocks for s in ins]
 
         if seg.kind in (MATMUL, FUSED_MM_ACT):
             # buffer every streamed operand fully (round-robin across them),
             # then emit output blocks at the MM initiation interval
             for i in range(max(nbs, default=0)):
                 rd = tuple((s, i) for s, nb in zip(ins, nbs) if i < nb)
-                p.steps.append(Step(reads=rd, delay=1))
-            mm = g.nodes[seg.meta.get("mm", seg.nodes[0])]
-            lhs = g.nodes[mm.inputs[0]]
-            kk = lhs.shape[-1] if lhs.shape else 1
-            ii = max(1, math.ceil(kk / seg_mm_parallel(seg)))
+                p.steps.append(Step(reads=rd, delay=block))
+            ii = block * segment_row_cost(plan, seg, seg_mm_parallel(seg))
             for i in range(nb_out):
                 p.steps.append(Step(writes=tuple((s, i) for s in outs),
                                     delay=ii))
         elif seg.kind == BUFFERING:
             for i in range(max(nbs, default=0)):
                 rd = tuple((s, i) for s, nb in zip(ins, nbs) if i < nb)
-                p.steps.append(Step(reads=rd, delay=1))
+                p.steps.append(Step(reads=rd, delay=block))
             for i in range(nb_out):
                 p.steps.append(Step(writes=tuple((s, i) for s in outs),
-                                    delay=1))
+                                    delay=block))
         else:
             # StreamChain: read block i from every input, write block i —
             # the whole fused chain costs one step per block
+            cost = block * segment_row_cost(plan, seg, seg_mm_parallel(seg))
             nb = max([nb_out] + nbs)
             for i in range(nb):
                 rd = tuple((s, i) for s, b in zip(ins, nbs) if i < b)
                 wr = tuple((s, i) for s in outs) if i < nb_out else ()
-                p.steps.append(Step(reads=rd, writes=wr, delay=1))
+                p.steps.append(Step(reads=rd, writes=wr, delay=cost))
         if p.steps:
             procs.append(p)
 
@@ -232,7 +332,7 @@ def map_to_dataflow(g: ComputeGraph, *, block: int | None = None,
         s = use_stream[("sink", j)]
         p = Process(f"sink{j}")
         for i in range(streams[s].n_blocks):
-            p.steps.append(Step(reads=((s, i),), delay=1))
+            p.steps.append(Step(reads=((s, i),), delay=block))
         procs.append(p)
 
     for p in procs:

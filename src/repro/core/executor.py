@@ -173,25 +173,33 @@ def check_streamable(g: ComputeGraph) -> bool:
     return True
 
 
+def _resident_val(plan: SegmentPlan, res_env, i: int, block: int, B: int):
+    a = res_env[i]
+    # broadcast-row-constant residents shrink to one block; weights
+    # (even if dim0 == B) stay whole
+    if i in plan.rowconst and a.ndim and a.shape[:1] == (B,):
+        a = a[:block]
+    return a
+
+
 def _run_segment(plan: SegmentPlan, seg, kernel: str, env, res_env,
                  block: int, B: int):
     """Execute one segment on one block; returns the segment's output."""
     g = plan.graph
+    cfg = plan.config
+    bm = cfg.bm if cfg is not None else 128
+    bn = cfg.bn if cfg is not None else 128
 
     def val(i):
         if i in plan.resident:
-            a = res_env[i]
-            # broadcast-row-constant residents shrink to one block; weights
-            # (even if dim0 == B) stay whole
-            if i in plan.rowconst and a.ndim and a.shape[:1] == (B,):
-                a = a[:block]
-            return a
+            return _resident_val(plan, res_env, i, block, B)
         return env[i]
 
     if kernel == "stream_matmul":
         from repro.kernels.stream_matmul import stream_matmul
         mm = g.nodes[seg.nodes[0]]
         return stream_matmul(env[mm.inputs[0]], res_env[mm.inputs[1]],
+                             bm=bm, bn=bn,
                              mm_parallel=seg.meta.get("mm_parallel"))
 
     if kernel == "siren_layer":
@@ -206,7 +214,7 @@ def _run_segment(plan: SegmentPlan, seg, kernel: str, env, res_env,
             b = res_env[seg.meta["bias"]]
             b = b[0] if b.ndim == 2 else b
         return siren_layer(x, w, b, w0=seg.meta["w0"],
-                           apply_sin=seg.meta["apply_sin"],
+                           apply_sin=seg.meta["apply_sin"], bm=bm, bn=bn,
                            mm_parallel=seg.meta.get("mm_parallel"))
 
     if kernel == "fused_chain":
@@ -218,7 +226,7 @@ def _run_segment(plan: SegmentPlan, seg, kernel: str, env, res_env,
             a = val(e)
             extras.append(a if a.shape == x.shape
                           else jnp.broadcast_to(a, x.shape))
-        return fused_chain(x, spec.steps, tuple(extras))
+        return fused_chain(x, spec.steps, tuple(extras), block_rows=bm)
 
     # reference fallback: interpret the segment node-by-node
     local: dict[int, jax.Array] = {}
@@ -230,9 +238,43 @@ def _run_segment(plan: SegmentPlan, seg, kernel: str, env, res_env,
     return local[seg.output]
 
 
+def _run_region(plan: SegmentPlan, region, env, res_env, block: int, B: int):
+    """Execute one FusedRegion on one block through the region megakernel
+    (``kernels.region``): intermediates stay in VMEM — one HBM read per
+    region input, one write per region output.  Region outputs are assigned
+    into ``env``."""
+    from repro.kernels.region import region_call
+    g = plan.graph
+    spec = region.spec
+    cfg = plan.config
+
+    stream = [env[nid] for nid in region.stream_inputs]
+    rows = stream[0].shape[0] if stream else block
+    for nid, cols in region.broadcast_inputs:
+        a = _resident_val(plan, res_env, nid, block, B)
+        stream.append(jnp.broadcast_to(a, (rows, cols)))
+    bias_ids = {s[4] for s in spec.steps if s[0] == "mm" and s[4] is not None}
+    residents = []
+    for nid in region.resident_inputs:
+        a = res_env[nid]
+        if nid in bias_ids and a.ndim == 2:
+            # bias is (1, N) or a row-const (B, N): one row is the vector
+            a = a[0]
+        residents.append(a)
+    out_info = tuple((g.nodes[o].shape[-1], g.nodes[o].dtype)
+                     for o in region.outputs)
+    outs = region_call(spec, stream, residents, out_info,
+                       bm=cfg.bm if cfg is not None else 128)
+    for nid, o in zip(region.outputs, outs):
+        env[nid] = o
+
+
 # per-graph compile cache for the thin wrapper below: repeat calls with the
 # same (graph, plan, HardwareConfig) reuse the CompiledGradient artifact.
-# Keyed by object identity — mutating a graph after executing it through
+# Keyed by object identity — the key holds the graph AND plan objects
+# themselves (SegmentPlan hashes by identity), never id() ints: a cached
+# entry keeps its plan alive, so a freed plan's recycled id can never alias
+# a different plan's artifact.  Mutating a graph after executing it through
 # this path is unsupported (go through core.pipeline.compile_from_graph).
 _GRAPH_CACHE: dict[tuple, object] = {}
 
@@ -257,15 +299,20 @@ def streaming_executor(g: ComputeGraph, block: int | None = None, *,
     back to the per-node interpreter elsewhere (kernels themselves also run
     in interpret mode off-TPU, so ``use_pallas=True`` is valid — just slower
     — on CPU).  ``dispatch_log``, if given, receives one
-    ``(segment_id, kind, kernel)`` entry per segment — the plan-level record
-    of what was dispatched.
+    ``(id, kind, kernel)`` entry per KERNEL INVOCATION of a block step:
+    when BOTH ``config.fuse_regions`` (the default) and Pallas dispatch are
+    on, a fused region logs a single
+    ``(region id, "FusedRegion", "region[...]")`` entry and every other
+    segment its classic ``(segment id, kind, kernel)``; with ``use_pallas``
+    off (the CPU auto default) the log is per-segment interpret entries —
+    region megakernels only dispatch under Pallas.
     """
     from repro.core.config import as_hardware_config
     from repro.core.pipeline import compile_from_graph
 
     cfg = as_hardware_config(config, block=block,
                              use_pallas=use_pallas).resolved()
-    key = (g, id(plan) if plan is not None else None, cfg)
+    key = (g, plan, cfg)
     cg = _GRAPH_CACHE.get(key)
     if cg is None:
         cg = compile_from_graph(g, config=cfg, plan=plan, emit_source=False)

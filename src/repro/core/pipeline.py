@@ -43,7 +43,8 @@ import jax.numpy as jnp
 from repro.core import codegen
 from repro.core.config import (DEFAULT_CONFIG, HardwareConfig,
                                as_hardware_config)
-from repro.core.executor import _eval_node, _run_segment, check_streamable
+from repro.core.executor import (_eval_node, _run_region, _run_segment,
+                                 check_streamable)
 from repro.core.graph import ComputeGraph
 from repro.core.segment import (SegmentPlan, apply_hardware_config,
                                 build_segment_plan, dispatch_table,
@@ -67,28 +68,37 @@ class CompiledGradient:
     def __init__(self, graph: ComputeGraph, plan: SegmentPlan, *,
                  config: HardwareConfig, residents: dict, dispatch: list,
                  source: str | None, fn=None, order: int | None = None,
-                 autoconfig=None):
+                 autoconfig=None, region_plan=None):
         self.graph = graph
         self.plan = plan
         self.config = config              # resolved HardwareConfig
         self.residents = residents        # node id -> concrete jax.Array
-        self.dispatch = dispatch          # [(segment id, kind, kernel)]
+        self.dispatch = dispatch          # one (id, kind, kernel) per kernel
         self.source = source              # emitted Python module (codegen)
         self.fn = fn                      # original INR fn (None via graph path)
         self.order = order
         self.autoconfig = autoconfig      # AutoConfigResult when config="auto"
+        self.region_plan = region_plan    # RegionPlan (None: per-segment)
         self.provenance = "trace"         # "trace" | "store" (set on restore)
         self.cache_hits = 0               # in-process hits served (metadata)
         self._signature = None            # lazy architecture signature
         self._stored_in: set[str] = set()  # store roots known to hold this
         self._dataflow: dict[tuple, dict] = {}
-        self._decisions = {sid: kernel for sid, _, kernel in dispatch}
+        from repro.core.segment import segment_dispatch
+        self._decisions = {
+            s.id: (segment_dispatch(plan, s) if config.use_pallas
+                   else INTERPRET) for s in plan.segments}
         self._streamed_outs = [o for o in graph.outputs
                                if o not in plan.resident]
         # the one jitted block pipeline (serving granule) ...
         self._block_apply = jax.jit(self._make_block_fn())
-        # ... its chunked form (lax.map over config.chunk_blocks blocks) ...
-        self._chunk_apply = jax.jit(self._make_chunk_fn())
+        # ... its chunked form (lax.map over config.chunk_blocks blocks);
+        # the chunk buffer is DONATED where the backend supports it, so
+        # steady-state serving reuses it instead of double-buffering every
+        # chunk in HBM ...
+        donate = (0,) if jax.default_backend() in ("tpu", "gpu") else ()
+        self._chunk_apply = jax.jit(self._make_chunk_fn(),
+                                    donate_argnums=donate)
         # ... and the classic full-plan-batch streaming execution
         self.apply = jax.jit(self._make_apply())
 
@@ -108,18 +118,32 @@ class CompiledGradient:
         ``f(res_env, *xblk) -> streamed outs``.  This is what the multi-INR
         serving path vmaps over a stacked resident axis — the plan, dispatch
         decisions, and block geometry are weight-independent, so ONE such
-        function serves every weight set of the architecture."""
+        function serves every weight set of the architecture.
+
+        With Pallas dispatch and a region plan, fused regions execute as ONE
+        megakernel each (``_run_region``): intermediates never leave VMEM.
+        Everything else runs segment-by-segment as before."""
         plan, g = self.plan, self.graph
         decisions = self._decisions
         block, B = self.config.block, plan.batch
         input_nodes = [g.nodes[i] for i in plan.inputs]
         streamed_outs = self._streamed_outs
 
+        # execution units, fixed at compile time: fused regions dispatch as
+        # megakernels only under Pallas (interpreted runs gain nothing)
+        if self.region_plan is not None and self.config.use_pallas:
+            units = self.region_plan.units()
+        else:
+            units = [("seg", s) for s in plan.segments]
+
         def block_fn(res_env, *xblk):
             env = {n.id: xblk[_p(n, "idx")] for n in input_nodes}
-            for seg in plan.segments:
-                env[seg.output] = _run_segment(plan, seg, decisions[seg.id],
-                                               env, res_env, block, B)
+            for kind, u in units:
+                if kind == "region":
+                    _run_region(plan, u, env, res_env, block, B)
+                else:
+                    env[u.output] = _run_segment(plan, u, decisions[u.id],
+                                                 env, res_env, block, B)
             return tuple(env[o] for o in streamed_outs)
         return block_fn
 
@@ -242,7 +266,9 @@ class CompiledGradient:
             from repro.core.fifo_opt import optimize_fifo_depths
             design = map_to_dataflow(
                 self.graph, block=db, mm_parallel=mm_parallel,
-                plan=self.plan, config=None if mm_parallel is not None else cfg)
+                plan=self.plan, config=None if mm_parallel is not None else cfg,
+                region_plan=None if mm_parallel is not None
+                else self.region_plan)
             res = optimize_fifo_depths(design, config=cfg)
             cached = {"design": design, "fifo": res, **res.summary()}
             self._dataflow[key] = cached
@@ -270,12 +296,14 @@ class CompiledGradient:
                  f"{len(self.graph.nodes)} nodes, "
                  f"{len(self.plan.segments)} segments, "
                  f"{len(self.residents)} residents, "
-                 f"{len(kernels)} Pallas-dispatched segments",
+                 f"{len(kernels)} Pallas-dispatched kernels",
                  f"  provenance: {prov}",
                  f"  signature: {self.signature}"]
         if self.autoconfig is not None:
             lines.append(f"  {self.autoconfig.describe()}")
         lines.append(self.plan.describe())
+        if self.region_plan is not None:
+            lines.append(self.region_plan.describe())
         return "\n".join(lines)
 
 
@@ -315,8 +343,20 @@ def compile_from_graph(g: ComputeGraph, *,
         # earlier artifacts sharing it keep the config they compiled with
         plan = apply_hardware_config(plan, cfg)
 
-    dispatch = (dispatch_table(plan) if cfg.use_pallas
-                else [(s.id, s.kind, INTERPRET) for s in plan.segments])
+    # the region schedule (DESIGN.md §7): deterministic for (plan, config),
+    # so executor, codegen, and dataflow all see the same fusion
+    region_plan = None
+    if cfg.fuse_regions:
+        from repro.core.regions import build_region_plan
+        region_plan = build_region_plan(plan, cfg)
+
+    if not cfg.use_pallas:
+        dispatch = [(s.id, s.kind, INTERPRET) for s in plan.segments]
+    elif region_plan is not None:
+        from repro.core.regions import region_dispatch_table
+        dispatch = region_dispatch_table(plan, region_plan)
+    else:
+        dispatch = dispatch_table(plan)
 
     # precompute residents once: the paper's on-chip tensors, never re-derived
     residents: dict[int, jax.Array] = {}
@@ -327,11 +367,13 @@ def compile_from_graph(g: ComputeGraph, *,
         else:
             residents[nid] = _eval_node(n, [residents[i] for i in n.inputs])
 
-    source = (codegen.emit_python(g, plan=plan, config=cfg)
+    source = (codegen.emit_python(g, plan=plan, config=cfg,
+                                  region_plan=region_plan)
               if emit_source else None)
     return CompiledGradient(g, plan, config=cfg, residents=residents,
                             dispatch=dispatch, source=source, fn=fn,
-                            order=order, autoconfig=autoconfig)
+                            order=order, autoconfig=autoconfig,
+                            region_plan=region_plan)
 
 
 # ---------------------------------------------------------------------------
@@ -545,7 +587,14 @@ def _compile_auto(fn, order: int, shape, dtype, *,
 
     g = _trace_graph(fn, order, trace_b, shape, dtype)
     plan = build_segment_plan(g)
-    result = resolve_config(g, plan, base=base)
+    # on TPU the analytic winner is refined against REAL apply_batched
+    # timings (block + bm/bn tile re-rank); off-TPU the search stays
+    # analytic — deterministic and cheap, what the tests rely on
+    measure = None
+    if jax.default_backend() == "tpu":
+        from repro.core.autoconfig import make_apply_batched_measure
+        measure = make_apply_batched_measure(g, plan)
+    result = resolve_config(g, plan, base=base, measure=measure)
     cfg = result.config
 
     resolved_key = (_fn_key(fn), int(order), (trace_b,) + tuple(shape[1:]),

@@ -1,0 +1,439 @@
+"""Region scheduler — fuse adjacent segments into VMEM-resident megakernels.
+
+The SegmentPlan (DESIGN.md §3) partitions the gradient graph into stream
+kernels, but the executor still dispatches every segment as its own Pallas
+call — each segment boundary round-trips a full ``(block, N)`` intermediate
+through HBM, the exact data movement the paper's FIFO streams exist to
+eliminate.  This module adds the fusion layer on top (DESIGN.md §7):
+
+    SegmentPlan --build_region_plan--> RegionPlan --+--> executor (1 Pallas
+                                                    |      call per region)
+                                                    +--> codegen (1 fn/region)
+                                                    +--> dataflow (intra-region
+                                                           FIFOs collapse)
+
+A ``FusedRegion`` is a maximal contiguous run of plan segments that
+
+  * are all REGION-EXPRESSIBLE — StreamChain with a fused_chain spec,
+    MatMul / FusedMmAct with a streamed 2-D lhs and resident rhs (exactly
+    the segments the standalone Pallas kernels accept);
+  * are CONNECTED — each joining segment consumes at least one tensor
+    produced inside the region (fusing it removes >= 1 HBM round-trip);
+  * fit the VMEM BUDGET — the region's working set at the ``bm`` row tile
+    (double-buffered inputs/outputs + whole weights + every live
+    intermediate) stays within ``HardwareConfig.vmem_budget``;
+  * respect the config's explicit ``region_cuts`` (the cut points
+    autoconfig searches).
+
+Buffering segments and inexpressible chains become singleton regions that
+keep the classic per-segment dispatch.  The greedy schedule is deterministic
+for a given (plan, config), so region ids are stable targets, the compile
+cache stays coherent, and the emitted source / dataflow mapping / executor
+all derive from the same RegionPlan.
+
+One deliberate divergence: the region plan describes the SCHEDULE, and the
+emitted source / dataflow mapping always follow it, but the executor engages
+the region megakernel only when ``use_pallas`` resolves True — an
+interpreted run (CPU default) executes segment-by-segment (identical
+numerics, nothing to fuse), and ``cg.dispatch`` records that per-segment
+interpretation.  This mirrors the pre-region behavior, where the emitted
+source named Pallas kernels in its docstrings while an interpreted artifact
+dispatched none of them.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.config import HardwareConfig
+from repro.core.segment import (FUSED_MM_ACT, MATMUL, STREAM_CHAIN,
+                                Segment, SegmentPlan, segment_dispatch)
+
+CHAIN = "chain"
+MM = "mm"
+
+FUSED_REGION = "FusedRegion"
+REGION_KERNEL = "region"
+
+
+# ---------------------------------------------------------------------------
+# per-segment lowering: Segment -> region-kernel step (or None)
+# ---------------------------------------------------------------------------
+
+def _lower_segment(plan: SegmentPlan, seg: Segment):
+    """Lower one segment to a region-kernel step tuple, or None when the
+    segment is not expressible inside the megakernel (the region scheduler
+    then makes it a singleton with the classic dispatch)."""
+    g = plan.graph
+    kernel = segment_dispatch(plan, seg)
+    if kernel == "fused_chain":
+        spec = seg.meta["chain"]
+        return (CHAIN, seg.output, spec.x, spec.steps, spec.extras)
+    if kernel == "stream_matmul":
+        mm = g.nodes[seg.nodes[0]]
+        return (MM, seg.output, mm.inputs[0], mm.inputs[1], None, 1.0, False)
+    if kernel == "siren_layer":
+        mm = g.nodes[seg.meta["mm"]]
+        return (MM, seg.output, mm.inputs[0], mm.inputs[1],
+                seg.meta["bias"], seg.meta["w0"], seg.meta["apply_sin"])
+    return None
+
+
+# ---------------------------------------------------------------------------
+# the region IR
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class FusedRegion:
+    """One execution unit of the region plan: a run of >= 1 segments.
+
+    ``stream_inputs``    — external streamed tensors, read from HBM per block.
+    ``broadcast_inputs`` — ``(node id, cols)`` resident chain extras the
+                           dispatcher broadcasts to block shape (they enter
+                           the kernel as streamed operands).
+    ``resident_inputs``  — whole-tensor VMEM operands (weights, biases).
+    ``outputs``          — tensors leaving the region (consumed by another
+                           region or graph outputs), written to HBM once.
+    ``spec``             — the lowered ``RegionKernelSpec`` for fused
+                           (multi-segment) regions; None for singletons,
+                           which dispatch through the classic per-segment
+                           path.
+    """
+    id: int
+    segments: tuple[int, ...]
+    stream_inputs: tuple[int, ...]
+    broadcast_inputs: tuple[tuple[int, int], ...]
+    resident_inputs: tuple[int, ...]
+    outputs: tuple[int, ...]
+    spec: object = None
+    meta: dict = field(default_factory=dict, compare=False)
+
+    @property
+    def fused(self) -> bool:
+        return len(self.segments) > 1 and self.spec is not None
+
+    def describe(self, plan: SegmentPlan) -> str:
+        segs = "+".join(f"s{s}" for s in self.segments)
+        tag = "fused" if self.fused else \
+            plan.segments[self.segments[0]].kind
+        return (f"region{self.id}[{tag}] {segs} "
+                f"in={len(self.stream_inputs)}+{len(self.broadcast_inputs)} "
+                f"out={len(self.outputs)}")
+
+
+@dataclass(eq=False)
+class RegionPlan:
+    plan: SegmentPlan
+    regions: list[FusedRegion]
+    region_of: dict[int, int]          # segment id -> region id
+    config: HardwareConfig
+
+    def fused_regions(self) -> list[FusedRegion]:
+        return [r for r in self.regions if r.fused]
+
+    def units(self) -> list[tuple[str, object]]:
+        """Execution units in plan order: ``("region", FusedRegion)`` for
+        fused regions, ``("seg", Segment)`` for singletons — the ONE
+        schedule walk executor, codegen, and dataflow all share."""
+        return [("region", r) if r.fused
+                else ("seg", self.plan.segments[r.segments[0]])
+                for r in self.regions]
+
+    def counts(self) -> dict:
+        fused = self.fused_regions()
+        return {"regions": len(self.regions), "fused": len(fused),
+                "segments_fused": sum(len(r.segments) for r in fused),
+                "dispatches": len(self.regions)}
+
+    def describe(self) -> str:
+        c = self.counts()
+        lines = [f"RegionPlan: {c['regions']} regions ({c['fused']} fused "
+                 f"covering {c['segments_fused']} segments) over "
+                 f"{len(self.plan.segments)} segments"]
+        lines += ["  " + r.describe(self.plan) for r in self.regions]
+        return "\n".join(lines)
+
+    # -- invariants --------------------------------------------------------
+    def validate(self):
+        plan = self.plan
+        covered = [s for r in self.regions for s in r.segments]
+        assert covered == [s.id for s in plan.segments], \
+            "regions must cover every segment exactly once, in plan order"
+        budget = self.config.vmem_budget
+        cuts = set(self.config.region_cuts)
+        for r in self.regions:
+            if not r.fused:
+                continue
+            assert r.spec is not None
+            assert region_vmem_bytes(plan, r, self.config) <= budget, \
+                (r.id, "region exceeds the VMEM budget")
+            # a forced cut is never fused across
+            assert not any(s in cuts for s in r.segments[:-1]), \
+                (r.id, "region fuses across a config cut point")
+            # every member past the first consumes something from the region
+            produced: set[int] = set()
+            for sid in r.segments:
+                seg = plan.segments[sid]
+                if produced:
+                    assert any(i in produced for i in seg.stream_inputs), \
+                        (r.id, sid, "disconnected segment in region")
+                produced.add(seg.output)
+        return True
+
+
+# ---------------------------------------------------------------------------
+# byte accounting (the VMEM budget + the HBM-traffic model the benchmark
+# and the dataflow mapping report)
+# ---------------------------------------------------------------------------
+
+def _row_bytes(g, nid: int) -> int:
+    """Bytes of ONE row (axis-0 slice) of a streamed tensor."""
+    n = g.nodes[nid]
+    itemsize = np.dtype(n.dtype).itemsize
+    if not n.shape:
+        return itemsize
+    return max(1, n.size // n.shape[0]) * itemsize
+
+
+def _whole_bytes(g, nid: int) -> int:
+    n = g.nodes[nid]
+    return n.size * np.dtype(n.dtype).itemsize
+
+
+def _region_io(plan: SegmentPlan, members, consumers=None):
+    """(stream_inputs, broadcast_inputs, resident_inputs, outputs, steps)
+    of a would-be region, or None when the members cannot share one kernel
+    (conflicting broadcast shapes).  ``consumers`` is the graph consumer
+    map — pass it when calling in a loop (building it is O(graph))."""
+    g = plan.graph
+    if consumers is None:
+        consumers = g.consumers()
+    node_set = {n for seg, _ in members for n in seg.nodes}
+    produced = {seg.output for seg, _ in members}
+    stream_in: list[int] = []
+    bcast: dict[int, int] = {}
+    res_in: list[int] = []
+    steps = []
+
+    def want_stream(nid):
+        if nid not in produced and nid not in stream_in:
+            stream_in.append(nid)
+
+    def want_res(nid):
+        if nid not in res_in:
+            res_in.append(nid)
+
+    for seg, step in members:
+        steps.append(step)
+        if step[0] == CHAIN:
+            _, out, x, chain_steps, extras = step
+            want_stream(x)
+            cols = g.nodes[out].shape[-1]
+            for e in extras:
+                if e in produced:
+                    continue
+                if e in plan.resident:
+                    if bcast.get(e, cols) != cols:
+                        return None            # one extra, two block shapes
+                    bcast[e] = cols
+                else:
+                    want_stream(e)
+        else:
+            _, out, x, w, bias, _, _ = step
+            want_stream(x)
+            want_res(w)
+            if bias is not None:
+                want_res(bias)
+
+    outputs = [seg.output for seg, _ in members
+               if seg.output in g.outputs
+               or any(c not in node_set for c in consumers[seg.output])]
+    return (tuple(stream_in), tuple(sorted(bcast.items())), tuple(res_in),
+            tuple(outputs), tuple(steps))
+
+
+def _vmem_estimate(plan: SegmentPlan, io, config: HardwareConfig) -> int:
+    """Working-set bytes of a region at the ``bm`` row tile: inputs and
+    outputs double-buffered (Pallas pipelines the next tile while computing),
+    whole weights, and every step output held live (conservative — values
+    could be freed at last use, but the bound keeps the schedule safe)."""
+    g = plan.graph
+    stream_in, bcast, res_in, outputs, steps = io
+    bm = config.bm
+    total = 0
+    for nid in stream_in:
+        total += 2 * bm * _row_bytes(g, nid)
+    for nid, cols in bcast:
+        total += 2 * bm * cols * np.dtype(g.nodes[nid].dtype).itemsize
+    for nid in res_in:
+        total += _whole_bytes(g, nid)
+    for step in steps:
+        total += bm * _row_bytes(g, step[1])
+    for nid in outputs:
+        total += 2 * bm * _row_bytes(g, nid)
+    return total
+
+
+def region_vmem_bytes(plan: SegmentPlan, region: FusedRegion,
+                      config: HardwareConfig, consumers=None) -> int:
+    """VMEM working-set estimate of a built region (validation + reporting).
+    Regions built by ``build_region_plan`` carry the estimate in
+    ``meta["vmem_bytes"]``; re-deriving is the fallback for hand-built ones."""
+    est = region.meta.get("vmem_bytes")
+    if est is not None:
+        return est
+    members = [(plan.segments[sid], _lower_segment(plan, plan.segments[sid]))
+               for sid in region.segments]
+    io = _region_io(plan, members, consumers)
+    assert io is not None
+    return _vmem_estimate(plan, io, config)
+
+
+def segment_hbm_bytes_per_block(plan: SegmentPlan, block: int) -> int:
+    """HBM traffic of ONE pipeline block under per-segment dispatch: every
+    segment reads its streamed inputs and writes its output."""
+    g = plan.graph
+    total = 0
+    for seg in plan.segments:
+        for i in seg.stream_inputs:
+            total += block * _row_bytes(g, i)
+        total += block * _row_bytes(g, seg.output)
+    return total
+
+
+def region_hbm_bytes_per_block(plan: SegmentPlan, rplan: RegionPlan,
+                               block: int) -> int:
+    """HBM traffic of ONE pipeline block under region dispatch: fused
+    regions read only region inputs and write only region outputs —
+    intra-region tensors never leave VMEM."""
+    g = plan.graph
+    total = 0
+    for r in rplan.regions:
+        if r.fused:
+            for i in r.stream_inputs:
+                total += block * _row_bytes(g, i)
+            for nid, cols in r.broadcast_inputs:
+                total += block * cols * np.dtype(g.nodes[nid].dtype).itemsize
+            for o in r.outputs:
+                total += block * _row_bytes(g, o)
+        else:
+            seg = plan.segments[r.segments[0]]
+            for i in seg.stream_inputs:
+                total += block * _row_bytes(g, i)
+            total += block * _row_bytes(g, seg.output)
+    return total
+
+
+# ---------------------------------------------------------------------------
+# the scheduler
+# ---------------------------------------------------------------------------
+
+def build_region_plan(plan: SegmentPlan,
+                      config: HardwareConfig | None = None) -> RegionPlan:
+    """Greedily merge adjacent expressible, connected segments into
+    FusedRegions under the config's VMEM budget and cut points.  With
+    ``fuse_regions=False`` every segment is a singleton region (the classic
+    per-segment pipeline, byte-for-byte)."""
+    if config is None:
+        config = plan.config
+    if config is None:
+        from repro.core.config import DEFAULT_CONFIG
+        config = DEFAULT_CONFIG
+    regions: list[FusedRegion] = []
+    region_of: dict[int, int] = {}
+    cuts = set(config.region_cuts)
+    consumers = plan.graph.consumers()     # built once, shared by every trial
+    cur: list = []                         # [(Segment, step)]
+
+    def singleton(seg: Segment) -> FusedRegion:
+        return FusedRegion(
+            id=len(regions), segments=(seg.id,),
+            stream_inputs=seg.stream_inputs, broadcast_inputs=(),
+            resident_inputs=seg.resident_inputs, outputs=(seg.output,),
+            spec=None)
+
+    def flush():
+        nonlocal cur
+        if not cur:
+            return
+        if len(cur) == 1:
+            r = singleton(cur[0][0])
+        else:
+            io = _region_io(plan, cur, consumers)
+            stream_in, bcast, res_in, outputs, steps = io
+            from repro.kernels.region import RegionKernelSpec
+            spec = RegionKernelSpec(
+                steps=steps,
+                stream_inputs=stream_in + tuple(n for n, _ in bcast),
+                residents=res_in, outputs=outputs)
+            r = FusedRegion(
+                id=len(regions), segments=tuple(s.id for s, _ in cur),
+                stream_inputs=stream_in, broadcast_inputs=bcast,
+                resident_inputs=res_in, outputs=outputs, spec=spec,
+                meta={"vmem_bytes": _vmem_estimate(plan, io, config)})
+        for sid in r.segments:
+            region_of[sid] = r.id
+        regions.append(r)
+        cur = []
+
+    for seg in plan.segments:
+        step = _lower_segment(plan, seg) if config.fuse_regions else None
+        if step is None:
+            flush()
+            r = singleton(seg)
+            region_of[seg.id] = r.id
+            regions.append(r)
+            continue
+        if cur:
+            produced = {s.output for s, _ in cur}
+            trial = cur + [(seg, step)]
+            io = _region_io(plan, trial, consumers)
+            joinable = (cur[-1][0].id not in cuts
+                        and any(i in produced for i in seg.stream_inputs)
+                        and io is not None
+                        and _vmem_estimate(plan, io, config)
+                        <= config.vmem_budget)
+            if not joinable:
+                flush()
+        cur.append((seg, step))
+    flush()
+
+    rplan = RegionPlan(plan=plan, regions=regions, region_of=region_of,
+                       config=config)
+    rplan.validate()
+    return rplan
+
+
+# ---------------------------------------------------------------------------
+# dispatch planning at region granularity (the executor's invocation log)
+# ---------------------------------------------------------------------------
+
+def region_dispatch_table(plan: SegmentPlan,
+                          rplan: RegionPlan) -> list[tuple]:
+    """One entry per KERNEL INVOCATION of a block step: fused regions
+    contribute a single ``(region id, "FusedRegion", "region[s..]")`` entry,
+    singletons keep the classic ``(segment id, kind, kernel)``."""
+    out = []
+    for r in rplan.regions:
+        if r.fused:
+            segs = f"s{r.segments[0]}-s{r.segments[-1]}"
+            out.append((r.id, FUSED_REGION,
+                        f"{REGION_KERNEL}[{len(r.segments)} segs {segs}]"))
+        else:
+            seg = plan.segments[r.segments[0]]
+            out.append((seg.id, seg.kind, segment_dispatch(plan, seg)))
+    return out
+
+
+def region_row_cost(plan: SegmentPlan, region: FusedRegion,
+                    mm_parallel_for) -> int:
+    """Row-cycles one region charges per streamed row (the dataflow oracle's
+    per-op calibrated cost, summed over the region's steps) — see
+    ``dataflow.OP_ROW_COST``."""
+    from repro.core.dataflow import segment_row_cost
+    return sum(segment_row_cost(plan, plan.segments[sid],
+                                mm_parallel_for(sid))
+               for sid in region.segments)

@@ -182,8 +182,11 @@ class StreamEdge:
     node: int                         # producer node id (tensor identity)
 
 
-@dataclass
+@dataclass(eq=False)
 class SegmentPlan:
+    # eq=False: plans compare and hash BY IDENTITY, so a plan object can key
+    # caches directly (executor._GRAPH_CACHE holds the plan it compiled —
+    # a freed plan's id() can be recycled; the object itself cannot)
     graph: ComputeGraph
     segments: list[Segment]
     edges: list[StreamEdge]

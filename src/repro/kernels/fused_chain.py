@@ -33,11 +33,14 @@ UNARY = {
 BINARY = {"mul", "add", "sub", "div"}
 
 
-def _chain_kernel(*refs, chain, n_extra):
-    x_ref = refs[0]
-    extra = refs[1:1 + n_extra]
-    o_ref = refs[1 + n_extra]
-    h = x_ref[...].astype(jnp.float32)
+def eval_chain(h, chain, extras=()):
+    """Apply a static chain of (op, operand) steps to ``h`` (float32).
+
+    ``extras`` holds one float32 array per BINARY step, in step order.  This
+    is the single evaluation rule both ``fused_chain`` and the region
+    megakernel (``kernels/region.py``) trace into their bodies, so a chain
+    computes bit-identically whether it runs standalone or fused into a
+    region."""
     ei = 0
     for op, operand in chain:
         if op in UNARY:
@@ -47,7 +50,7 @@ def _chain_kernel(*refs, chain, n_extra):
         elif op == "offset":
             h = h + operand
         elif op in BINARY:
-            other = extra[ei][...].astype(jnp.float32)
+            other = extras[ei]
             ei += 1
             if op == "mul":
                 h = h * other
@@ -59,7 +62,16 @@ def _chain_kernel(*refs, chain, n_extra):
                 h = h / other
         else:
             raise ValueError(f"fused_chain: unknown op {op}")
-    o_ref[...] = h.astype(o_ref.dtype)
+    return h
+
+
+def _chain_kernel(*refs, chain, n_extra):
+    x_ref = refs[0]
+    extra = refs[1:1 + n_extra]
+    o_ref = refs[1 + n_extra]
+    h = x_ref[...].astype(jnp.float32)
+    extras = [e[...].astype(jnp.float32) for e in extra]
+    o_ref[...] = eval_chain(h, chain, extras).astype(o_ref.dtype)
 
 
 def fused_chain(x: jax.Array, chain, extras=(), *, block_rows: int = 256,

@@ -1,0 +1,141 @@
+"""region — a whole FusedRegion as ONE Pallas megakernel.
+
+INR-Arch's speedup comes from connecting its stream kernels with on-chip
+FIFO streams: an intermediate tensor flows from one PE to the next without
+ever visiting DRAM.  The per-segment TPU execution loses exactly that — each
+segment is its own ``pallas_call``, so every inter-segment tensor round-trips
+a full ``(block, N)`` buffer through HBM.  This kernel is the TPU analogue of
+the paper's FIFO-connected PE chain: it executes a whole region (a run of
+StreamChain / MatMul / FusedMmAct segments, scheduled by ``core/regions.py``)
+per grid step, holding every intermediate in VMEM values — one HBM read per
+region input and one HBM write per region output, regardless of how many
+segments the region fuses.
+
+The region is described by a static ``RegionKernelSpec``: a tuple of steps
+evaluated in order against a node-id -> value environment traced into the
+kernel body.
+
+  * ``("chain", out, x, chain_steps, extra_ids)`` — a StreamChain segment:
+    ``fused_chain.eval_chain`` applied to ``env[x]`` (binary-step operands
+    come from ``env[extra_ids[k]]``), bit-identical to the standalone kernel.
+  * ``("mm", out, x, w, bias, w0, apply_sin)`` — a MatMul / FusedMmAct
+    segment: ``env[x] @ w  [+ bias]  [-> sin(w0 *)]`` with the WHOLE weight
+    resident in VMEM, the full K reduced in one MXU dot per row tile (the
+    region trades the standalone kernel's ``bk`` reduction tiling for
+    never materializing the MM input/output in HBM).
+
+The grid tiles ROWS only (``bm`` from the HardwareConfig): every step's
+row-block is independent, which is exactly why the paper can stream its
+graphs through FIFOs.  Column tiling (``bn``) stays with the standalone
+kernels — inside a region an MM needs all K columns of its operand.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import interpret_default
+from repro.kernels.fused_chain import eval_chain
+
+CHAIN = "chain"
+MM = "mm"
+
+
+@dataclass(frozen=True)
+class RegionKernelSpec:
+    """Static description of one region megakernel.
+
+    ``steps``         — evaluation program, in segment plan order (see module
+                        docstring for the two step forms).
+    ``stream_inputs`` — node ids read block-by-block from HBM, in kernel
+                        argument order.  Includes resident chain extras that
+                        the dispatcher pre-broadcasts to block shape.
+    ``residents``     — node ids of whole-tensor VMEM operands (MM weights
+                        and bias vectors), in kernel argument order.
+    ``outputs``       — node ids written back to HBM, one out ref each.
+    """
+    steps: tuple
+    stream_inputs: tuple[int, ...]
+    residents: tuple[int, ...]
+    outputs: tuple[int, ...]
+
+    @property
+    def n_stream(self) -> int:
+        return len(self.stream_inputs)
+
+
+def _region_kernel(*refs, spec: RegionKernelSpec):
+    ns = spec.n_stream
+    nr = len(spec.residents)
+    env = {nid: refs[i][...].astype(jnp.float32)
+           for i, nid in enumerate(spec.stream_inputs)}
+    res = {nid: refs[ns + i] for i, nid in enumerate(spec.residents)}
+    for step in spec.steps:
+        if step[0] == CHAIN:
+            _, out, x, chain_steps, extra_ids = step
+            extras = [env[e] for e in extra_ids]
+            env[out] = eval_chain(env[x], chain_steps, extras)
+        elif step[0] == MM:
+            _, out, x, w, bias, w0, apply_sin = step
+            h = jnp.dot(env[x], res[w][...].astype(jnp.float32),
+                        preferred_element_type=jnp.float32)
+            if bias is not None:
+                h = h + res[bias][...].astype(jnp.float32)
+            if apply_sin:
+                h = jnp.sin(w0 * h)
+            env[out] = h
+        else:
+            raise ValueError(f"region: unknown step kind {step[0]!r}")
+    out_refs = refs[ns + nr:]
+    for o_ref, nid in zip(out_refs, spec.outputs):
+        o_ref[...] = env[nid].astype(o_ref.dtype)
+
+
+def region_call(spec: RegionKernelSpec, stream, residents, out_info, *,
+                bm: int = 128, interpret: bool | None = None):
+    """Execute one region over ``[R, C]`` streamed inputs.
+
+    ``stream``    — arrays aligned with ``spec.stream_inputs`` (all [R, Ci]).
+    ``residents`` — arrays aligned with ``spec.residents`` (whole tensors).
+    ``out_info``  — ``(cols, dtype)`` per ``spec.outputs`` entry.
+
+    Rows stream through the kernel ``bm`` at a time; intermediates live only
+    as VMEM values inside one grid step.  Returns one array per output.
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    assert len(stream) == len(spec.stream_inputs), (spec, len(stream))
+    R = stream[0].shape[0]
+    br = min(bm, R)
+    pad = (-R) % br
+    if pad:
+        stream = [jnp.pad(a, ((0, pad), (0, 0))) for a in stream]
+    Rp = R + pad
+
+    in_specs = [pl.BlockSpec((br, a.shape[1]), lambda i: (i, 0))
+                for a in stream]
+    for r in residents:
+        if r.ndim == 2:
+            in_specs.append(pl.BlockSpec(r.shape, lambda i: (0, 0)))
+        else:
+            in_specs.append(pl.BlockSpec(r.shape, lambda i: (0,)))
+    out_specs = [pl.BlockSpec((br, c), lambda i: (i, 0))
+                 for c, _ in out_info]
+    out_shape = [jax.ShapeDtypeStruct((Rp, c), dt) for c, dt in out_info]
+
+    outs = pl.pallas_call(
+        functools.partial(_region_kernel, spec=spec),
+        grid=(Rp // br,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(*stream, *residents)
+    if not isinstance(outs, (list, tuple)):
+        outs = (outs,)
+    return tuple(o[:R] for o in outs)

@@ -1,0 +1,306 @@
+"""Fused-region block pipeline (DESIGN.md §7).
+
+Covers the ISSUE-5 acceptance surface: region-megakernel parity with the
+reference executor for orders 1-3 on non-block-multiple batches (Pallas
+interpret on CPU), dispatch reduction (>= 2x fewer kernel invocations on the
+2nd/3rd-order SIREN graphs), region-plan invariants (VMEM budget, exact
+segment coverage, cut points), the HBM-traffic model, the dataflow FIFO
+collapse, autoconfig's region dimensions, and the executor cache-key fix
+(plans keyed by object, not by recyclable id()).
+"""
+
+import gc
+import weakref
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.siren import SirenConfig
+from repro.core import codegen
+from repro.core import executor as ex
+from repro.core import pipeline as P
+from repro.core.config import DEFAULT_CONFIG, HardwareConfig
+from repro.core.passes import optimize
+from repro.core.regions import (build_region_plan, region_hbm_bytes_per_block,
+                                region_vmem_bytes, segment_hbm_bytes_per_block)
+from repro.core.segment import build_segment_plan
+from repro.core.trace import extract_graph
+from repro.inr.gradnet import paper_gradients
+from repro.inr.siren import siren_fn, siren_init
+
+
+@pytest.fixture(autouse=True)
+def fresh_cache():
+    P.clear_compile_cache()
+    yield
+    P.clear_compile_cache()
+
+
+@pytest.fixture(scope="module")
+def small_siren():
+    cfg = SirenConfig(hidden_features=32, hidden_layers=1)
+    params = siren_init(cfg, jax.random.PRNGKey(0))
+    f = siren_fn(cfg, params)
+    x = jax.random.uniform(jax.random.PRNGKey(1),
+                           (16, cfg.in_features), jnp.float32, -1, 1)
+    return cfg, f, x
+
+
+def _graph(siren_setup, order):
+    cfg, params, f, x = siren_setup
+    gfn = paper_gradients(f, order, cfg.out_features, cfg.in_features)
+    g = extract_graph(gfn, x)
+    optimize(g)
+    return g, x
+
+
+FUSED = HardwareConfig(block=8, use_pallas=True, fuse_regions=True)
+UNFUSED = HardwareConfig(block=8, use_pallas=True, fuse_regions=False)
+
+
+# -- parity ------------------------------------------------------------------
+
+@pytest.mark.parametrize("order", [1, 2, 3])
+def test_region_parity_nonmultiple_batch(small_siren, order):
+    """Fused-region serving == reference executor for orders 1-3 on a batch
+    that is NOT a block multiple (the Pallas megakernel runs in interpret
+    mode on CPU)."""
+    cfg, f, x = small_siren
+    cg = P.compile_gradient(f, order, x, config=FUSED)
+    assert cg.region_plan is not None
+    assert cg.region_plan.fused_regions(), "SIREN gradient graphs must fuse"
+    n = 11                                     # not a multiple of block=8
+    coords = x[:n]
+    want = ex.reference_executor(cg.graph)(
+        jnp.concatenate([coords, jnp.broadcast_to(coords[-1:],
+                                                  (16 - n, x.shape[1]))]))
+    got = cg.apply_batched(coords)
+    for a, b in zip(want, got):
+        np.testing.assert_allclose(np.asarray(a)[:n], b, rtol=1e-4,
+                                   atol=1e-4)
+
+
+@pytest.mark.parametrize("order", [1, 2, 3])
+def test_fused_matches_unfused_executor(small_siren, order):
+    """The fused-region path agrees with the unfused Pallas executor to
+    sin-reassociation tolerance on the same artifact inputs."""
+    cfg, f, x = small_siren
+    fused = P.compile_gradient(f, order, x, config=FUSED)
+    unfused = P.compile_gradient(f, order, x, config=UNFUSED)
+    assert fused is not unfused
+    got_f = fused.apply_batched(x)
+    got_u = unfused.apply_batched(x)
+    for a, b in zip(got_u, got_f):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+# -- dispatch ----------------------------------------------------------------
+
+@pytest.mark.parametrize("order", [2, 3])
+def test_dispatch_reduction(small_siren, order):
+    """Region fusion reduces per-block kernel dispatches >= 2x on the
+    2nd/3rd-order SIREN graphs, and the dispatch log shows region entries."""
+    cfg, f, x = small_siren
+    fused = P.compile_gradient(f, order, x, config=FUSED)
+    unfused = P.compile_gradient(f, order, x, config=UNFUSED)
+    assert len(unfused.dispatch) >= 2 * len(fused.dispatch)
+    kinds = [k for _, k, _ in fused.dispatch]
+    kernels = [k for _, _, k in fused.dispatch]
+    assert "FusedRegion" in kinds
+    assert any(k.startswith("region[") for k in kernels)
+
+
+def test_dispatch_log_shows_region_entries(small_siren):
+    """streaming_executor's dispatch_log records the region invocations."""
+    cfg, f, x = small_siren
+    gfn = paper_gradients(f, 2, cfg.out_features, cfg.in_features)
+    g = extract_graph(gfn, x)
+    optimize(g)
+    log = []
+    ex.streaming_executor(g, config=FUSED, dispatch_log=log)
+    assert any(kind == "FusedRegion" for _, kind, _ in log)
+
+
+# -- plan invariants ---------------------------------------------------------
+
+@pytest.mark.parametrize("order", [1, 2, 3])
+def test_region_plan_invariants(small_siren, order):
+    """Every segment is covered exactly once in plan order; fused regions
+    respect the VMEM budget and pass validation."""
+    cfg, f, x = small_siren
+    gfn = paper_gradients(f, order, cfg.out_features, cfg.in_features)
+    g = extract_graph(gfn, x)
+    optimize(g)
+    plan = build_segment_plan(g, config=FUSED.resolved())
+    rplan = build_region_plan(plan, FUSED.resolved())
+    assert rplan.validate()
+    covered = [s for r in rplan.regions for s in r.segments]
+    assert covered == [s.id for s in plan.segments]
+    for r in rplan.fused_regions():
+        assert region_vmem_bytes(plan, r, rplan.config) \
+            <= rplan.config.vmem_budget
+
+
+def test_vmem_budget_limits_region_growth(small_siren):
+    """A tiny VMEM budget forces smaller regions (or none): the scheduler
+    must respect it, and the pipeline still computes correctly."""
+    cfg, f, x = small_siren
+    tight = FUSED.replace(vmem_budget=64 * 1024)
+    roomy = FUSED
+    cg_t = P.compile_gradient(f, 2, x, config=tight)
+    cg_r = P.compile_gradient(f, 2, x, config=roomy)
+    t_sizes = [len(r.segments) for r in cg_t.region_plan.fused_regions()]
+    r_sizes = [len(r.segments) for r in cg_r.region_plan.fused_regions()]
+    assert max(t_sizes, default=1) <= max(r_sizes, default=1)
+    assert cg_t.region_plan.validate()
+    for a, b in zip(cg_r.apply_batched(x), cg_t.apply_batched(x)):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+def test_region_cuts_respected(small_siren):
+    """An explicit region_cut forces a boundary after that segment."""
+    cfg, f, x = small_siren
+    base = P.compile_gradient(f, 2, x, config=FUSED)
+    fused = base.region_plan.fused_regions()
+    assert fused and len(fused[0].segments) >= 2
+    cut_at = fused[0].segments[0]
+    cut_cfg = FUSED.replace(region_cuts=(cut_at,))
+    cg = P.compile_gradient(f, 2, x, config=cut_cfg)
+    for r in cg.region_plan.fused_regions():
+        assert cut_at not in r.segments[:-1]
+    for a, b in zip(base.apply_batched(x), cg.apply_batched(x)):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+def test_unfused_config_is_pure_singletons(small_siren):
+    cfg, f, x = small_siren
+    cg = P.compile_gradient(f, 2, x, config=UNFUSED)
+    assert cg.region_plan is None
+    assert len(cg.dispatch) == len(cg.plan.segments)
+
+
+# -- byte accounting ---------------------------------------------------------
+
+def test_region_hbm_bytes_shrink(small_siren):
+    """The per-block HBM traffic model: fused regions move strictly fewer
+    bytes than per-segment dispatch (that is the whole point)."""
+    cfg, f, x = small_siren
+    cg = P.compile_gradient(f, 2, x, config=FUSED)
+    block = cg.config.block
+    fused_b = region_hbm_bytes_per_block(cg.plan, cg.region_plan, block)
+    unfused_b = segment_hbm_bytes_per_block(cg.plan, block)
+    assert fused_b < unfused_b
+    assert fused_b <= unfused_b // 2, (fused_b, unfused_b)
+
+
+# -- dataflow collapse -------------------------------------------------------
+
+def test_dataflow_collapses_intra_region_streams(small_siren):
+    """map_to_dataflow at region granularity: intra-region FIFO edges
+    vanish (fewer streams), and the design stays deadlock-free through the
+    FIFO optimization."""
+    from repro.core.dataflow import DataflowGraph, map_to_dataflow
+    from repro.core.fifo_opt import optimize_fifo_depths
+
+    cfg, f, x = small_siren
+    cg = P.compile_gradient(f, 2, x, config=FUSED)
+    d_fused = map_to_dataflow(cg.graph, plan=cg.plan, config=cg.config,
+                              region_plan=cg.region_plan)
+    d_unf = map_to_dataflow(cg.graph, plan=cg.plan,
+                            config=cg.config.replace(fuse_regions=False))
+    assert len(d_fused.streams) < len(d_unf.streams)
+    res = optimize_fifo_depths(d_fused, config=cg.config)
+    dead, _, _ = DataflowGraph(d_fused).check(res.depths_after)
+    assert not dead
+
+
+# -- autoconfig dimensions ---------------------------------------------------
+
+def test_autoconfig_scores_unfused_floor(small_siren):
+    """config="auto" scores the unfused default and never returns a config
+    worse than it (or the fused base) on the oracle."""
+    from repro.core import autoconfig as AC
+
+    cfg, f, x = small_siren
+    g = extract_graph(paper_gradients(f, 2, cfg.out_features,
+                                      cfg.in_features), x)
+    optimize(g)
+    res = AC.resolve_config(g)
+    assert any(not c.fused for c in res.candidates), \
+        "the unfused baseline must be scored"
+    unfused_floor = min(c.row_cycles for c in res.candidates
+                        if not c.fused and not c.deadlocked)
+    assert res.predicted_row_cycles <= unfused_floor
+    assert res.predicted_row_cycles <= res.baseline_row_cycles
+
+
+def test_autoconfig_measure_ranks_tiles(small_siren):
+    """The measure hook drives the bm/bn tile search: a hook preferring
+    large tiles must steer the choice."""
+    from repro.core import autoconfig as AC
+
+    cfg, f, x = small_siren
+    g = extract_graph(paper_gradients(f, 1, cfg.out_features,
+                                      cfg.in_features), x)
+    optimize(g)
+    res = AC.resolve_config(g, measure=lambda c: -(c.bm * c.bn))
+    assert (res.config.bm, res.config.bn) == max(
+        AC.TILE_LADDER, key=lambda t: t[0] * t[1])
+
+
+def test_auto_config_parity_with_default(small_siren):
+    """The auto-resolved (fused) config computes the same values as the
+    unfused default across the serving path."""
+    cfg, f, x = small_siren
+    auto = P.compile_gradient(f, 2, x, config="auto")
+    default = P.compile_gradient(f, 2, x, config=UNFUSED)
+    for a, b in zip(default.apply_batched(x[:13]),
+                    auto.apply_batched(x[:13])):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+# -- codegen -----------------------------------------------------------------
+
+def test_codegen_emits_one_function_per_region(small_siren):
+    """With fusion on, the emitted module has one function per fused region
+    plus one per remaining segment, and it exec-loads to parity."""
+    cfg, f, x = small_siren
+    cg = P.compile_gradient(f, 2, x, config=FUSED.replace(use_pallas=False))
+    rplan = cg.region_plan
+    n_fused = len(rplan.fused_regions())
+    n_single = len(rplan.regions) - n_fused
+    assert cg.source.count("def region") == n_fused >= 1
+    assert cg.source.count("def seg") == n_single
+    pipe, _ = codegen.load_generated(cg.source)
+    want = ex.reference_executor(cg.graph)(x)
+    got = pipe(codegen.graph_consts(cg.graph, cg.plan), x)
+    for a, b in zip(want, got):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+# -- the cache-key fix (ISSUE-5 satellite) -----------------------------------
+
+def test_graph_cache_keys_hold_the_plan_object(small_siren):
+    """Regression: executor._GRAPH_CACHE used to key on id(plan) — a freed
+    plan's id can be recycled and alias a DIFFERENT plan's artifact.  The
+    key now holds the plan object itself: a cached plan can never be freed,
+    so its id can never be recycled while the entry lives."""
+    cfg, f, x = small_siren
+    gfn = paper_gradients(f, 1, cfg.out_features, cfg.in_features)
+    g = extract_graph(gfn, x)
+    optimize(g)
+    plan = build_segment_plan(g)
+    ref = weakref.ref(plan)
+    ex.streaming_executor(g, block=8, plan=plan)
+    assert any(plan is k[1] for k in ex._GRAPH_CACHE), \
+        "cache key must hold the plan object, not a raw id"
+    del plan
+    gc.collect()
+    assert ref() is not None, "cached plan must stay alive (id unrecyclable)"
+    # distinct plan objects for the same graph are distinct cache entries
+    plan2 = build_segment_plan(g)
+    before = len(ex._GRAPH_CACHE)
+    ex.streaming_executor(g, block=8, plan=plan2)
+    assert len(ex._GRAPH_CACHE) == before + 1

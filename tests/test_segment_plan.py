@@ -74,12 +74,16 @@ def test_codegen_one_function_per_segment(siren_setup):
 def test_streaming_executor_dispatches_pallas_kernels(siren_setup):
     """On a 2nd-order SIREN gradient graph the executor dispatches at least
     one fused_chain and one stream_matmul/siren_layer Pallas call (recorded
-    in the plan-level dispatch log) while matching the reference executor."""
+    in the plan-level dispatch log) while matching the reference executor.
+    ``fuse_regions=False`` pins the classic per-segment dispatch — the fused
+    region path has its own coverage in tests/test_regions.py."""
+    from repro.core.config import HardwareConfig
+
     g, _, x = _siren_graph(siren_setup, 2)
     want = ex.reference_executor(g)(x)
     log = []
-    got = ex.streaming_executor(g, block=8, use_pallas=True,
-                                dispatch_log=log)(x)
+    cfg = HardwareConfig(block=8, use_pallas=True, fuse_regions=False)
+    got = ex.streaming_executor(g, config=cfg, dispatch_log=log)(x)
     kernels = [k for _, _, k in log]
     assert "fused_chain" in kernels
     assert "stream_matmul" in kernels or "siren_layer" in kernels
@@ -88,12 +92,15 @@ def test_streaming_executor_dispatches_pallas_kernels(siren_setup):
 
 
 def test_dispatch_log_matches_plan(siren_setup):
-    """The dispatch log is exactly the plan's static dispatch table."""
+    """With region fusion off, the dispatch log is exactly the plan's
+    static per-segment dispatch table."""
+    from repro.core.config import HardwareConfig
+
     g, _, _ = _siren_graph(siren_setup, 2)
     plan = build_segment_plan(g)
     log = []
-    ex.streaming_executor(g, block=8, plan=plan, use_pallas=True,
-                          dispatch_log=log)
+    cfg = HardwareConfig(block=8, use_pallas=True, fuse_regions=False)
+    ex.streaming_executor(g, plan=plan, config=cfg, dispatch_log=log)
     assert log == dispatch_table(plan)
 
 
