@@ -2,7 +2,7 @@
 
 PY ?= python
 
-.PHONY: test test-fast serve-smoke bench bench-segments bench-regions bench-regions-check bench-pipeline bench-autotune bench-serve bench-json
+.PHONY: test test-fast serve-smoke async-smoke bench bench-segments bench-regions bench-regions-check bench-pipeline bench-autotune bench-serve bench-json
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -12,6 +12,9 @@ test-fast:
 
 serve-smoke:
 	PYTHONPATH=src $(PY) scripts/serve_smoke.py
+
+async-smoke:
+	PYTHONPATH=src $(PY) scripts/async_serve_smoke.py
 
 bench:
 	PYTHONPATH=src $(PY) -m benchmarks.run

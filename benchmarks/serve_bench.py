@@ -1,6 +1,6 @@
-"""Serving-layer benchmark: artifact cold-start and multi-INR throughput.
+"""Serving-layer benchmark: cold-start, multi-INR, and async throughput.
 
-Two claims of the serve subsystem (DESIGN.md §6), measured:
+Three claims of the serve subsystem (DESIGN.md §6, §8), measured:
 
   * cold-start — a serving replica's first artifact should come from the
     warm ArtifactStore (read + rebuild), not from the tracer.  We time
@@ -9,6 +9,10 @@ Two claims of the serve subsystem (DESIGN.md §6), measured:
   * multi-INR batching — K weight sets of one architecture served through
     ONE compiled artifact (stacked residents + vmapped block pipeline)
     should beat K separate ``apply_batched`` passes.
+  * async serving — the AsyncServingEngine's double-buffered, continuously
+    batched dispatch must beat synchronous serve-on-arrival by >= 1.3x on
+    a stream of small mixed-INR requests, at BIT-IDENTICAL results (the
+    ISSUE-6 acceptance bar; both throughput numbers land in the JSON).
 
 Emits ``serve/...`` rows; ``--json`` lands them in ``results/serve.json``.
 """
@@ -18,12 +22,15 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.common import emit, time_fn
 from repro.configs.siren import SirenConfig
 from repro.core import pipeline as P
+from repro.core.config import DEFAULT_CONFIG
 from repro.inr.siren import siren_fn, siren_init
-from repro.serve import ArtifactStore, MultiINRArtifact, bind_weights
+from repro.serve import (ArtifactStore, AsyncServingEngine, MultiINRArtifact,
+                         ServingEngine, bind_weights)
 
 
 def run(hidden: int = 64, layers: int = 2, order: int = 2,
@@ -83,6 +90,78 @@ def run(hidden: int = 64, layers: int = 2, order: int = 2,
              f"rows_per_s={n_inrs * n_queries / (batched_us / 1e6):.0f} "
              f"speedup_vs_loop={loop_us / max(batched_us, 1e-3):.2f}x",
              n_inrs=n_inrs, n_queries=n_queries)
+
+    run_async()
+
+
+def run_async(n_inrs: int = 3, n_requests: int = 64, repeats: int = 5):
+    """Sync serve-on-arrival vs async submit/drain on a stream of small
+    mixed-INR requests (the fleet-serving arrival pattern the async engine
+    exists for)."""
+    cfg = SirenConfig(hidden_features=32, hidden_layers=1)
+    x = jax.random.uniform(jax.random.PRNGKey(1),
+                           (cfg.batch, cfg.in_features), jnp.float32, -1, 1)
+    hw = DEFAULT_CONFIG.replace(block=16, chunk_blocks=4)
+    cgs = [P.compile_gradient(siren_fn(cfg, siren_init(
+        cfg, jax.random.PRNGKey(200 + k))), 1, x, config=hw)
+        for k in range(n_inrs)]
+    rng = np.random.default_rng(0)
+    reqs = [(f"i{int(rng.integers(n_inrs))}",
+             jax.random.uniform(jax.random.PRNGKey(300 + j),
+                                (int(rng.integers(4, 33)), cfg.in_features),
+                                jnp.float32, -1, 1))
+            for j in range(n_requests)]
+    rows = sum(int(q.shape[0]) for _, q in reqs)
+
+    with tempfile.TemporaryDirectory(prefix="inr-serve-bench-") as root:
+        sync = ServingEngine(root + "/s")
+        asyn = AsyncServingEngine(root + "/a")
+        for k, cg in enumerate(cgs):
+            sync.register(f"i{k}", cg)
+            asyn.register(f"i{k}", cg)
+
+        # parity gate: one sync batch call vs submit-all/drain, bit exact
+        want = sync.serve(reqs)
+        got = asyn.serve_async(reqs)
+        bit_exact = all(
+            np.array_equal(np.asarray(a), np.asarray(b))
+            for w, g in zip(want, got) for a, b in zip(w, g))
+        assert bit_exact, "async serving must be bit-identical to sync"
+
+        def sync_stream():
+            # serve-on-arrival: each request grouped, padded, dispatched,
+            # and BLOCKED on individually — the pre-async baseline
+            return [sync.serve([r])[0] for r in reqs]
+
+        def async_stream():
+            for inr_id, q in reqs:
+                asyn.submit(inr_id, q)
+            return asyn.drain()
+
+        sync_us, async_us = [], []
+        for fn, sink in ((sync_stream, sync_us), (async_stream, async_us)):
+            fn()                                     # warm the traces
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                jax.block_until_ready(fn())
+                sink.append((time.perf_counter() - t0) * 1e6)
+        sync_med = sorted(sync_us)[len(sync_us) // 2]
+        async_med = sorted(async_us)[len(async_us) // 2]
+        sync_rps = n_requests / (sync_med / 1e6)
+        async_rps = n_requests / (async_med / 1e6)
+        speedup = sync_med / max(async_med, 1e-3)
+
+        emit("serve/async/sync_serve_on_arrival_us", sync_med,
+             f"req_per_s={sync_rps:.0f} rows_per_s={rows / (sync_med / 1e6):.0f}",
+             n_requests=n_requests, req_per_s=sync_rps)
+        emit("serve/async/async_submit_drain_us", async_med,
+             f"req_per_s={async_rps:.0f} speedup_vs_sync={speedup:.2f}x "
+             f"bit_exact={bit_exact}",
+             n_requests=n_requests, req_per_s=async_rps,
+             sync_req_per_s=sync_rps, async_req_per_s=async_rps,
+             speedup_vs_sync=speedup, bit_exact=bit_exact,
+             chunks=asyn.stats["async_chunks"],
+             multi_chunks=asyn.stats["async_multi_chunks"])
 
 
 if __name__ == "__main__":

@@ -4,14 +4,17 @@
 # deadlock-freedom + numeric parity) surfaces compiler-layer breakage in
 # seconds; the serve smoke (compile -> persist -> restore in a FRESH
 # subprocess -> exact parity, zero tracer invocations) gates the artifact
-# store; the regions check gates the fused-region scheduler (dispatch count
-# and predicted per-block HBM bytes must not regress vs the committed
-# results/regions_baseline.json); then a fast gate without the slow
-# training tests; then the full suite (including @pytest.mark.slow).
+# store; the async serve smoke gates the double-buffered dispatch engine
+# (submit/drain bit-identical to sync across rounds); the regions check
+# gates the fused-region scheduler (dispatch count and predicted per-block
+# HBM bytes must not regress vs the committed results/regions_baseline.json);
+# then a fast gate without the slow training tests; then the full suite
+# (including @pytest.mark.slow).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m repro.core.autoconfig
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python scripts/serve_smoke.py
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python scripts/async_serve_smoke.py
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.run regions --check
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q -m "not slow" "$@"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

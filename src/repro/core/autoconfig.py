@@ -35,6 +35,15 @@ The search is deterministic — greedy steepest-descent over a finite ladder —
 so a given graph always resolves to the same config, and the compile cache
 (keyed on the resolved config) stays coherent.
 
+Sharded serving (DESIGN.md §8): a base config with ``n_shards > 1`` makes
+every candidate inherit the cross-shard input stream — the dataflow model
+inserts one more FIFO edge per pipeline input (an ``xshard`` forwarder at
+``xshard_row_cost`` row-cycles per row), so both the latency oracle and
+the deadlock rejection account for the host -> shard interconnect hop.
+``compile_gradient(config="auto", base_config=...)`` is the front-door
+spelling; the serving engine stamps ``n_shards`` on its per-shard config
+variants the same way.
+
 An optional ``measure`` hook refines the analytic choice with on-device
 timings: given a callable ``config -> seconds``, the block and tile-shape
 candidates of the analytic winner are re-ranked by measured wall time.

@@ -64,6 +64,17 @@ class HardwareConfig:
     * ``region_cuts``      — segment ids after which a region is forced to
                              end — explicit cut points (what autoconfig
                              searches on top of the greedy scheduler).
+    * ``n_shards``         — devices the serving batch is split across.  At
+                             ``> 1`` the dataflow model inserts one CROSS-
+                             SHARD stream per pipeline input (the host ->
+                             shard interconnect hop), so the latency oracle
+                             and the deadlock check stay honest under a
+                             sharded mesh (DESIGN.md §8).
+    * ``xshard_row_cost``  — calibrated row-cycles one streamed row charges
+                             crossing the interconnect (host DMA + ICI hop);
+                             2 ≈ a transcendental, matching the measured
+                             device_put-per-row overhead of the CPU/TPU
+                             streams the serve benchmarks time.
     """
 
     block: int = 8
@@ -78,10 +89,12 @@ class HardwareConfig:
     fuse_regions: bool = True
     vmem_budget: int = 8 * 1024 * 1024
     region_cuts: tuple[int, ...] = ()
+    n_shards: int = 1
+    xshard_row_cost: int = 2
 
     def __post_init__(self):
         for name in ("block", "chunk_blocks", "dataflow_block", "mm_parallel",
-                     "bm", "bn", "vmem_budget"):
+                     "bm", "bn", "vmem_budget", "n_shards", "xshard_row_cost"):
             v = getattr(self, name)
             if not isinstance(v, int) or v <= 0:
                 raise ValueError(f"HardwareConfig.{name} must be a positive "
@@ -164,12 +177,15 @@ class HardwareConfig:
         ov = (f" +{len(self.mm_parallel_per_segment)} per-segment"
               if self.mm_parallel_per_segment else "")
         cuts = f" cuts={list(self.region_cuts)}" if self.region_cuts else ""
+        shards = (f" n_shards={self.n_shards}"
+                  f" xshard_row_cost={self.xshard_row_cost}"
+                  if self.n_shards > 1 else "")
         return (f"block={self.block} chunk_blocks={self.chunk_blocks} "
                 f"dataflow_block={self.dataflow_block} "
                 f"mm_parallel={self.mm_parallel}{ov} "
                 f"use_pallas={self.use_pallas} fifo_alpha={self.fifo_alpha} "
                 f"bm={self.bm} bn={self.bn} "
-                f"fuse_regions={self.fuse_regions}{cuts}")
+                f"fuse_regions={self.fuse_regions}{cuts}{shards}")
 
 
 DEFAULT_CONFIG = HardwareConfig()

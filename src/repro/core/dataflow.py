@@ -31,6 +31,15 @@ With a RegionPlan (``core/regions.py``), fused regions map to ONE process
 each: intra-region tensors get no FIFO at all (they live in the megakernel's
 VMEM values — the on-chip streams of the paper's FIFO-connected PEs), and the
 region charges the sum of its member segments' row costs per block step.
+
+Under a SHARDED serving mesh (``config.n_shards > 1``, DESIGN.md §8) the
+host -> shard interconnect hop is modeled as one more FIFO edge per
+pipeline input: the Input source writes a HOST-side stream, and an
+``xshard`` process forwards each block onto the device-side stream at the
+calibrated per-row cost ``config.xshard_row_cost``.  The deadlock analysis
+and the latency oracle both see that edge, so ``config="auto"`` stays
+honest about the cross-shard stream instead of pretending queries
+materialize on-device for free.
 """
 
 from __future__ import annotations
@@ -249,15 +258,30 @@ def map_to_dataflow(g: ComputeGraph, *, block: int | None = None,
             cp.steps.append(Step(delay=block))
             procs.append(cp)
 
-    # Input sources feed the pipeline
+    # Input sources feed the pipeline.  On a sharded mesh the source is the
+    # HOST: its blocks cross the interconnect through one more FIFO edge —
+    # an xshard forwarder charging the calibrated per-row hop cost — before
+    # they reach the device-side input stream the kernels read.
+    n_shards = config.n_shards if config is not None else 1
     for nid in plan.inputs:
         if nid not in producer_stream:
             continue                           # unused input: no stream
         node = g.nodes[nid]
         p = Process(f"Input{nid}")
         s = producer_stream[nid]
-        for i in range(_n_blocks(node, block)):
-            p.steps.append(Step(writes=((s, i),), delay=block))
+        nb_in = _n_blocks(node, block)
+        if n_shards > 1:
+            s_host = new_stream(node)          # host side of the interconnect
+            xp = Process(f"xshard{nid}")
+            hop = block * max(1, config.xshard_row_cost)
+            for i in range(nb_in):
+                p.steps.append(Step(writes=((s_host, i),), delay=block))
+                xp.steps.append(Step(reads=((s_host, i),),
+                                     writes=((s, i),), delay=hop))
+            procs.append(xp)
+        else:
+            for i in range(nb_in):
+                p.steps.append(Step(writes=((s, i),), delay=block))
         procs.append(p)
 
     # one process per unit (segment, or fused region)

@@ -182,6 +182,30 @@ class CompiledGradient:
                          for o in g.outputs)
         return apply
 
+    def apply_chunk(self, xchunk):
+        """One jitted CHUNK step of the serving path: ``xchunk`` is
+        [n_blocks, block, ...features] already split into blocks; returns the
+        streamed outputs, each [n_blocks, block, ...].  This is the granule
+        the async serving engine's continuous-batching loop dispatches —
+        the per-chunk loop of ``apply_batched`` lifted out so ADMISSION can
+        happen between chunks (DESIGN.md §8).  Shape-stable callers (full
+        ``config.chunk_blocks`` chunks) hit one compiled trace."""
+        return self._chunk_apply(xchunk)
+
+    def apply_block(self, xblk):
+        """One jitted BLOCK step ([block, ...features] -> streamed outs) —
+        the remainder granule of the serving path."""
+        return self._block_apply(xblk)
+
+    def streamed_outputs(self) -> list[int]:
+        """Graph outputs served by the streaming path, in output order (the
+        rest are residents, read from ``resident_output``)."""
+        return list(self._streamed_outs)
+
+    def resident_output(self, o: int, n: int):
+        """A resident (const-derived) output broadcast to ``n`` rows."""
+        return self._resident_output(o, n)
+
     def apply_batched(self, coords):
         """Serve an arbitrary number of query rows through the compiled
         pipeline.
@@ -447,7 +471,9 @@ def compile_gradient(fn, order: int, example_coords, *,
                      config: HardwareConfig | str | None = None,
                      block: int | None = None,
                      use_pallas: bool | None = None,
-                     store=None) -> CompiledGradient:
+                     store=None,
+                     base_config: HardwareConfig | None = None,
+                     ) -> CompiledGradient:
     """The pipeline front door: compile-or-hit the full INR-Arch compiler for
     the ``order``-th gradient computation of INR ``fn``.
 
@@ -465,7 +491,11 @@ def compile_gradient(fn, order: int, example_coords, *,
         per-MM-segment parallelism with the dataflow latency oracle,
         rejecting deadlock-flagged candidates (the paper's automatic
         hardware-parameter configuration); the result rides on the artifact
-        as ``cg.autoconfig``.
+        as ``cg.autoconfig``.  ``base_config`` (auto mode only) seeds the
+        search: pass e.g. ``DEFAULT_CONFIG.replace(n_shards=4)`` so the
+        oracle models the cross-shard input stream of a sharded serving
+        mesh (DESIGN.md §8) — every candidate inherits its non-searched
+        fields.
 
     Repeat calls with the same (fn identity, order, coord shape/dtype,
     resolved HardwareConfig) return the SAME artifact — no re-trace, no
@@ -491,7 +521,11 @@ def compile_gradient(fn, order: int, example_coords, *,
             raise ValueError(f"config must be a HardwareConfig, None, or "
                              f"'auto'; got {config!r}")
         return _compile_auto(fn, order, shape, dtype, block=block,
-                             use_pallas=use_pallas, store=store)
+                             use_pallas=use_pallas, store=store,
+                             base_config=base_config)
+    if base_config is not None:
+        raise ValueError("base_config only seeds config='auto'; pass it as "
+                         "config= for an explicit request")
 
     cfg = as_hardware_config(config, block=block,
                              use_pallas=use_pallas).resolved()
@@ -546,7 +580,9 @@ def _request_key(fn, order, trace_b, shape, dtype, cfg):
 def _compile_auto(fn, order: int, shape, dtype, *,
                   block: int | None = None,
                   use_pallas: bool | None = None,
-                  store=None) -> CompiledGradient:
+                  store=None,
+                  base_config: HardwareConfig | None = None,
+                  ) -> CompiledGradient:
     """config="auto": trace once, let autoconfig pick the HardwareConfig,
     compile with the winner, and cache under BOTH the auto request and the
     resolved config (so explicit requests for the winner hit the same
@@ -555,7 +591,7 @@ def _compile_auto(fn, order: int, shape, dtype, *,
     the artifact carries the persisted AutoConfigResult."""
     from repro.core.autoconfig import resolve_config
 
-    base = as_hardware_config(None, block=block,
+    base = as_hardware_config(base_config, block=block,
                               use_pallas=use_pallas).resolved()
     # round the trace batch to the LCM-ish of the block candidates (multiples
     # of 8) so the search may pick any block that divides it

@@ -50,6 +50,11 @@ LOGICAL_RULES: dict[str, tuple[str, ...]] = {
 # Activation logical axes
 ACT_RULES: dict[str, tuple[str, ...]] = {
     "batch": ("fsdp",),
+    # the multi-INR K axis (serve/multi_inr.py): stacked weight payloads of
+    # a fleet of resident INRs — the large tensor at fleet scale.  Sharded
+    # across the data axes first (each INR's weights are independent), the
+    # model axis as fallback; rows stay per-shard-local (DESIGN.md §8).
+    "inr": ("fsdp", "model"),
     "seq": (),                   # overridden to ("model",) under seq parallelism
     "act_embed": (),
     "act_heads": ("model",),

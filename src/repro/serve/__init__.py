@@ -15,9 +15,16 @@ package is the deployment half:
   * ``engine``    — ServingEngine: the request-level front door — (inr_id,
                     coords) queries grouped by artifact, padded/chunked
                     through ``apply_batched``, optionally sharded across
-                    devices via ``distributed.sharding.ShardingPolicy``.
+                    devices via ``distributed.sharding.ShardingPolicy``
+                    (multi-INR groups shard the stacked K axis);
+  * ``async_engine`` — AsyncServingEngine: the same front door with
+                    double-buffered dispatch and continuous batching at
+                    chunk boundaries (``submit``/``drain``/``serve_async``,
+                    DESIGN.md §8) — bit-identical results, overlapped
+                    host/device phases.
 """
 
+from repro.serve.async_engine import AsyncServingEngine
 from repro.serve.engine import ServingEngine
 from repro.serve.multi_inr import (MultiINRArtifact, bind_weights,
                                    const_payload)
@@ -26,5 +33,5 @@ from repro.serve.store import ArtifactStore, arch_signature, fn_fingerprint
 __all__ = [
     "ArtifactStore", "arch_signature", "fn_fingerprint",
     "MultiINRArtifact", "bind_weights", "const_payload",
-    "ServingEngine",
+    "ServingEngine", "AsyncServingEngine",
 ]

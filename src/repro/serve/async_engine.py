@@ -1,0 +1,422 @@
+"""AsyncServingEngine — double-buffered dispatch + continuous batching.
+
+The synchronous ``ServingEngine.serve`` runs each request group as
+group → pad → dispatch → BLOCK: the host sits idle while the device
+executes, and every request pays its own padding and dispatch overhead.
+This module overlaps those phases (DESIGN.md §8):
+
+  * ``submit(inr_id, coords)`` returns a ticket immediately; rows are
+    appended to a per-signature admission queue, NOT dispatched.
+  * An admission pump coalesces pending rows into FULL serving chunks
+    (``config.chunk_blocks * block`` rows) and dispatches them through the
+    artifact's jitted chunk step (``apply_chunk``) the moment a chunk
+    fills.  JAX dispatch is asynchronous, so while the device executes
+    chunk *i* the host is already grouping and padding chunk *i+1* —
+    double buffering with a bounded in-flight queue (``inflight``, default
+    two-deep: one executing, one queued).  When the queue is full the
+    oldest item is retired first (blocking retrieval); between dispatches
+    ready items are retired opportunistically via ``jax.Array.is_ready``
+    (non-blocking).
+  * ``drain()`` flushes the remainders (full blocks through the jitted
+    block step, one final padded block), retires everything in flight, and
+    returns results for every outstanding ticket IN SUBMISSION ORDER.
+
+Continuous batching.  Admission happens at CHUNK BOUNDARIES: a chunk's
+rows may span several tickets (requests coalesce — the win over
+serve-on-arrival), and for a signature served by several INRs the pump
+builds multi-INR chunks whose K lanes are exactly the INRs with pending
+rows at that boundary.  A request that arrives mid-stream joins the lane
+set at the next chunk (admission); a lane whose rows are exhausted leaves
+it (eviction).  Lanes shorter than the chunk are padded with their own
+edge row — padding never reaches a caller.
+
+Parity.  Every op in the block pipeline is row-wise (a query row's outputs
+depend only on that row and the weights), and async dispatch reuses the
+same jitted chunk/block steps at the same shapes, so repacking rows across
+chunk boundaries returns BIT-IDENTICAL results to the synchronous path —
+asserted by tests/test_async_serve.py and the serving benchmark.
+
+Routing matches the sync engine at each dispatch: a signature whose only
+pending lane is the base weight set takes the single-INR fast path;
+anything else takes the multi-INR (stacked-resident) path.
+"""
+
+from __future__ import annotations
+
+import math
+import time
+from collections import OrderedDict, deque
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from repro.serve.engine import ServingEngine
+from repro.serve.multi_inr import pad_rows
+
+
+def _is_ready(x) -> bool:
+    try:
+        return bool(x.is_ready())
+    except AttributeError:      # non-jax leaf (plain numpy): always ready
+        return True
+
+
+@dataclass
+class _Ticket:
+    """One submitted request: assembly state for its results."""
+    inr_id: str
+    sig: str
+    wid: str
+    n: int                                   # rows requested
+    filled: int = 0                          # rows scattered so far
+    # streamed-output position -> [(row offset in ticket, slice), ...]
+    parts: dict = field(default_factory=dict)
+
+    def scatter(self, o_idx: int, tstart: int, val) -> None:
+        self.parts.setdefault(o_idx, []).append((tstart, val))
+
+
+@dataclass
+class _Pending:
+    """A lane of not-yet-dispatched rows for one INR (FIFO of ticket
+    slices)."""
+    slices: deque = field(default_factory=deque)   # (ticket_idx, coords, tstart)
+    rows: int = 0
+    feat_shape: tuple = ()
+    dtype: object = None
+
+    def push(self, ticket_idx: int, coords, tstart: int = 0) -> None:
+        self.slices.append((ticket_idx, coords, tstart))
+        self.rows += int(coords.shape[0])
+        self.feat_shape = tuple(coords.shape[1:])
+        self.dtype = coords.dtype
+
+    def take(self, n: int):
+        """Pop up to ``n`` rows; returns (coords [m, ...], scatter) where
+        scatter is [(ticket_idx, tstart, start-in-coords, count), ...].
+        A drained lane yields 0 rows (an exhausted generation lane rides
+        along as padding)."""
+        cols, scatter, got = [], [], 0
+        while got < n and self.slices:
+            ti, c, tstart = self.slices.popleft()
+            m = int(c.shape[0])
+            if got + m <= n:
+                cols.append(c)
+                scatter.append((ti, tstart, got, m))
+                got += m
+            else:
+                take = n - got
+                cols.append(c[:take])
+                scatter.append((ti, tstart, got, take))
+                self.slices.appendleft((ti, c[take:], tstart + take))
+                got = n
+        self.rows -= got
+        if not cols:
+            return jnp.zeros((0,) + self.feat_shape, self.dtype), scatter
+        coords = cols[0] if len(cols) == 1 else jnp.concatenate(cols)
+        return coords, scatter
+
+
+@dataclass
+class _InFlight:
+    """A dispatched (not yet retired) device computation."""
+    kind: str                  # "chunk" | "block" | "multi"
+    outs: tuple                # streamed outputs, still materializing
+    scatter: list              # entries, shape depends on kind
+    t_dispatch: float
+    rows: int
+
+
+class AsyncServingEngine(ServingEngine):
+    """ServingEngine with asynchronous, continuously-batched dispatch.
+
+    ``inflight`` bounds the dispatch queue depth (2 = double buffering).
+    ``serve`` (inherited) stays available as the synchronous baseline;
+    ``serve_async`` is its overlapped equivalent and returns bit-identical
+    results in the same request order.
+    """
+
+    def __init__(self, store=None, *, inflight: int = 2, **kw):
+        super().__init__(store, **kw)
+        if inflight < 1:
+            raise ValueError(f"inflight must be >= 1, got {inflight}")
+        self.inflight = int(inflight)
+        self._tickets: list[_Ticket] = []
+        self._drained_upto = 0
+        # sig -> OrderedDict[inr_id -> _Pending]  (admission queues)
+        self._pending: "OrderedDict[str, OrderedDict[str, _Pending]]" = \
+            OrderedDict()
+        # sig -> lane tuple fixed at the last admission boundary (see _pump)
+        self._gen: dict[str, tuple[str, ...]] = {}
+        self._queue: deque[_InFlight] = deque()
+        for k in ("submitted", "async_chunks", "async_blocks",
+                  "async_multi_chunks", "admissions", "evictions",
+                  "max_inflight"):
+            self.stats.setdefault(k, 0)
+
+    # -- submission --------------------------------------------------------
+
+    def _enqueue(self, inr_id: str, coords) -> int:
+        t0 = time.perf_counter()
+        if inr_id not in self._routes:
+            raise KeyError(f"unregistered inr_id {inr_id!r}")
+        sig, wid = self._routes[inr_id]
+        coords = jnp.asarray(coords)
+        ticket = len(self._tickets)
+        self._tickets.append(_Ticket(inr_id, sig, wid, int(coords.shape[0])))
+        self.stats["submitted"] += 1
+        self.stats["requests"] += 1
+        if coords.shape[0]:
+            lanes = self._pending.setdefault(sig, OrderedDict())
+            if inr_id not in lanes:
+                lanes[inr_id] = _Pending()
+                self.stats["admissions"] += 1
+            lanes[inr_id].push(ticket, coords)
+        self.stats["host_group_s"] += time.perf_counter() - t0
+        return ticket
+
+    def submit(self, inr_id: str, coords) -> int:
+        """Enqueue one request; returns its ticket index.  Full chunks
+        dispatch immediately (overlapping any execution in flight); partial
+        rows wait for coalescing until ``drain``."""
+        ticket = self._enqueue(inr_id, coords)
+        self._pump(flush=False)
+        self._poll()
+        return ticket
+
+    def serve_async(self, requests):
+        """Asynchronous counterpart of ``serve``: enqueue every request,
+        then drain — results in request order, BIT-IDENTICAL to one sync
+        ``serve`` call over the same list.  Enqueueing the whole batch
+        before the pump runs fixes each signature's lane generation to
+        exactly the sync path's grouping (XLA specializes K=1 math, so
+        mixing a lone-lane dispatch into a stream the sync path serves
+        multi-INR would change low bits); the double-buffered overlap
+        happens across the chunks of the drain."""
+        tickets = [self._enqueue(i, c) for i, c in requests]
+        results = self.drain()
+        base = tickets[0] if tickets else 0
+        return [results[t - base] for t in tickets]
+
+    def drain(self):
+        """Flush all pending rows, retire everything in flight, and return
+        the results of every ticket since the last drain, in submission
+        order."""
+        self._pump(flush=True)
+        while self._queue:
+            self._retire(self._queue.popleft())
+        out = [self._finalize(t)
+               for t in self._tickets[self._drained_upto:]]
+        self._drained_upto = len(self._tickets)
+        return out
+
+    def pending_rows(self) -> int:
+        return sum(p.rows for lanes in self._pending.values()
+                   for p in lanes.values())
+
+    # -- the admission pump ------------------------------------------------
+
+    def _pump(self, *, flush: bool) -> None:
+        """Dispatch every admissible chunk.  Admission/eviction happens at
+        chunk boundaries: a newly-submitted lane joins the serving set (the
+        GENERATION) at the next boundary, and that reform also drops lanes
+        that have drained (eviction).  Between reforms the generation is
+        FIXED — an exhausted lane rides along as padding rather than
+        shrinking K, so every chunk of a generation hits one compiled trace
+        and, crucially, rows keep the exact bit pattern of the sync path
+        (XLA specializes K=1 vmapped math, so a shrinking lane count would
+        flip low bits mid-stream)."""
+        for sig in list(self._pending):
+            lanes = self._pending[sig]
+            gen = self._gen.get(sig)
+            while True:
+                live = [i for i, p in lanes.items() if p.rows > 0]
+                if not live:
+                    # generation fully drained: evict every lane
+                    self.stats["evictions"] += len(gen or ())
+                    self._gen.pop(sig, None)
+                    del self._pending[sig]
+                    break
+                if gen is None or any(i not in gen for i in live):
+                    # admission boundary: new lanes join, drained ones leave
+                    if gen is not None:
+                        dropped = [i for i in gen if i not in live]
+                        self.stats["evictions"] += len(dropped)
+                        for i in dropped:
+                            lanes.pop(i, None)
+                    gen = tuple(i for i in lanes if i in live)
+                    self._gen[sig] = gen
+                cg = self._artifact(sig)
+                block = cg.config.block
+                chunk_rows = cg.config.chunk_blocks * block
+                single = (len(gen) == 1
+                          and self._routes[gen[0]][1]
+                          == self._base_wid.get(sig))
+                n_max = max(lanes[i].rows for i in gen)
+                if single:
+                    p = lanes[gen[0]]
+                    if p.rows >= chunk_rows:
+                        self._dispatch_single_chunk(sig, p, chunk_rows)
+                    elif flush:
+                        self._flush_single(sig, p)
+                    else:
+                        break
+                else:
+                    if n_max >= chunk_rows or flush:
+                        nb = min(cg.config.chunk_blocks,
+                                 math.ceil(n_max / block))
+                        self._dispatch_multi(sig, lanes, gen, nb)
+                    else:
+                        break
+
+    # -- dispatch ----------------------------------------------------------
+
+    def _dispatch(self, item: _InFlight) -> None:
+        while len(self._queue) >= self.inflight:
+            self._retire(self._queue.popleft())
+        self._queue.append(item)
+        self.stats["max_inflight"] = max(self.stats["max_inflight"],
+                                         len(self._queue))
+
+    def _dispatch_single_chunk(self, sig: str, p: _Pending,
+                               chunk_rows: int) -> None:
+        t0 = time.perf_counter()
+        cg = self._artifact(sig)
+        block = cg.config.block
+        coords, scatter = p.take(chunk_rows)
+        xc = coords.reshape(chunk_rows // block, block, *coords.shape[1:])
+        self.stats["host_group_s"] += time.perf_counter() - t0
+        self.stats["async_chunks"] += 1
+        self.stats["rows"] += chunk_rows
+        self._dispatch(_InFlight("chunk", cg.apply_chunk(xc), scatter,
+                                 time.perf_counter(), chunk_rows))
+
+    def _flush_single(self, sig: str, p: _Pending) -> None:
+        """Drain a partial single-INR lane: full blocks through the jitted
+        block step, the final partial block edge-padded (padding rows are
+        simply never scattered)."""
+        cg = self._artifact(sig)
+        block = cg.config.block
+        while p.rows:
+            t0 = time.perf_counter()
+            n = min(block, p.rows)
+            coords, scatter = p.take(n)
+            self.stats["rows"] += n
+            self.stats["padded_rows"] += block - n
+            if n < block:
+                coords = pad_rows(coords, block)
+            self.stats["host_group_s"] += time.perf_counter() - t0
+            self.stats["async_blocks"] += 1
+            self._dispatch(_InFlight("block", cg.apply_block(coords),
+                                     scatter, time.perf_counter(), n))
+
+    def _dispatch_multi(self, sig: str, lanes, active, nb: int) -> None:
+        """One continuous-batching round: a [nb, K, block, ...] chunk whose
+        K lanes are the INRs admitted at this boundary."""
+        t0 = time.perf_counter()
+        cg = self._artifact(sig)
+        block = cg.config.block
+        take = nb * block
+        wids = tuple(self._routes[i][1] for i in active)
+        m = self._multi_artifact(sig, wids)
+        cols, scatter = [], []
+        for k, inr_id in enumerate(active):
+            p = lanes[inr_id]
+            n = min(p.rows, take)
+            coords, sc = p.take(n)
+            self.stats["rows"] += n
+            self.stats["padded_rows"] += take - n
+            cols.append(pad_rows(coords, take))
+            scatter.extend((ti, tstart, k, start, count)
+                           for ti, tstart, start, count in sc)
+        batch = jnp.stack(cols)                        # [K, take, ...]
+        xb = jnp.moveaxis(
+            batch.reshape(len(active), nb, block, *batch.shape[2:]), 0, 1)
+        self.stats["host_group_s"] += time.perf_counter() - t0
+        self.stats["async_multi_chunks"] += 1
+        if m.k_sharded:
+            self.stats["k_sharded_batches"] += 1
+        self._dispatch(_InFlight("multi", m.apply_chunk(xb), scatter,
+                                 time.perf_counter(), take * len(active)))
+
+    # -- retirement / assembly ---------------------------------------------
+
+    def _poll(self) -> None:
+        """Retire ready items without blocking (front of the queue first —
+        retiring out of order would not preserve FIFO depth semantics)."""
+        while self._queue and all(_is_ready(o) for o in self._queue[0].outs):
+            self._retire(self._queue.popleft())
+
+    def _retire(self, item: _InFlight) -> None:
+        t0 = time.perf_counter()
+        self.stats["queue_wait_s"] += t0 - item.t_dispatch
+        jax.block_until_ready(item.outs)
+        self.stats["device_exec_s"] += time.perf_counter() - t0
+        if item.kind == "multi":
+            # outs: each [nb, K, block, ...] -> per-lane flat rows
+            flat = [jnp.moveaxis(o, 0, 1).reshape(
+                        o.shape[1], o.shape[0] * o.shape[2], *o.shape[3:])
+                    for o in item.outs]
+            for ti, tstart, lane, start, count in item.scatter:
+                t = self._tickets[ti]
+                for o_idx, o in enumerate(flat):
+                    t.scatter(o_idx, tstart, o[lane, start:start + count])
+                t.filled += count
+        else:
+            # "chunk": each [nb, block, ...] -> flat rows; "block": already
+            # [block, ...]
+            flat = [o.reshape(o.shape[0] * o.shape[1], *o.shape[2:])
+                    if item.kind == "chunk" else o
+                    for o in item.outs]
+            for ti, tstart, start, count in item.scatter:
+                t = self._tickets[ti]
+                for o_idx, o in enumerate(flat):
+                    t.scatter(o_idx, tstart, o[start:start + count])
+                t.filled += count
+
+    def _finalize(self, t: _Ticket):
+        cg = self._artifact(t.sig)
+        if t.filled != t.n:
+            raise RuntimeError(f"ticket for {t.inr_id!r} assembled "
+                               f"{t.filled}/{t.n} rows")
+        outs = []
+        s_idx = 0
+        for o in cg.graph.outputs:
+            if o in cg.plan.resident:
+                outs.append(self._resident_out(t, o))
+                continue
+            if t.n == 0:
+                outs.append(jnp.zeros(
+                    (0,) + tuple(cg.graph.nodes[o].shape[1:]),
+                    cg.graph.nodes[o].dtype))
+            else:
+                parts = sorted(t.parts[s_idx], key=lambda p: p[0])
+                cols = [v for _, v in parts]
+                outs.append(cols[0] if len(cols) == 1
+                            else jnp.concatenate(cols))
+            s_idx += 1
+        return tuple(outs)
+
+    def _resident_out(self, t: _Ticket, o: int):
+        """Resident (const-derived) outputs depend on the weight set, not
+        the rows: base weights read the artifact's own residents, any other
+        set reads its (cached) K=1 stacked residents — bitwise the same
+        values the sync multi path returns."""
+        if t.wid == self._base_wid.get(t.sig):
+            return self._artifact(t.sig).resident_output(o, t.n)
+        m = self._multi_artifact(t.sig, (t.wid,))
+        return m.resident_output(o, t.n)[0]
+
+    # -- introspection -----------------------------------------------------
+
+    def describe(self) -> str:
+        st = self.stats
+        return (super().describe()
+                + f"\n  async: inflight<= {self.inflight} "
+                f"(peak {st['max_inflight']}), "
+                f"{st['async_chunks']} chunks / {st['async_blocks']} blocks "
+                f"/ {st['async_multi_chunks']} multi-chunks dispatched, "
+                f"{st['admissions']} lane admissions / "
+                f"{st['evictions']} evictions, "
+                f"{self.pending_rows()} rows pending")

@@ -14,25 +14,49 @@ ONE streaming pass: a single-INR group goes through the artifact's
 ``apply_batched``; a group spanning several INRs goes through a
 ``MultiINRArtifact`` (per-INR rows padded to a common block-multiple length
 — edge rows replicated, padding never reaches a caller).  Restored
-artifacts and multi-INR stacks are cached in-process, so steady-state
-serving never touches the tracer OR the disk.
+artifacts and multi-INR stacks are cached in-process behind bounded LRU
+caches (see below), so steady-state serving never touches the tracer OR
+the disk.  ``serve`` is the SYNCHRONOUS path — group, pad, dispatch, block
+on the result; ``serve.async_engine.AsyncServingEngine`` overlaps those
+phases with a double-buffered dispatch queue and admits requests at chunk
+boundaries (DESIGN.md §8).
 
-Sharding.  With a ``distributed.sharding.ShardingPolicy`` the engine
-device_puts each group's query batch against the policy's mesh — the batch
-(rows) axis is sharded across the data axes when divisible, and jit's SPMD
-partitioner splits the streaming pipeline accordingly (residents are
-replicated constants).  ``shard_chunking=True`` additionally gives each
-shard its own HardwareConfig: the serving chunk is scaled to the per-device
-slice (``chunk_blocks / n_devices``), compiled as a config variant of the
-same graph — ``compile_from_graph``, never a re-trace.  The variant applies
-to the single-INR ``apply_batched`` path only: the multi-INR path streams
-block-by-block with no chunk loop, so there is no chunk knob to scale
-(its batches are still sharded via the policy).
+Sharding.  With a ``distributed.sharding.ShardingPolicy``:
+
+  * single-INR groups device_put the query batch against the policy's mesh
+    — the rows axis is sharded across the data axes when divisible, and
+    jit's SPMD partitioner splits the streaming pipeline accordingly;
+  * multi-INR groups shard the **K axis**: the stacked weight payloads are
+    the large tensor at fleet scale, so ``MultiINRArtifact`` places every
+    stacked resident K-sharded and keeps the rows axis per-shard-local
+    (each device serves its slice of the INR fleet, no cross-shard
+    collective in the hot loop);
+  * ``shard_chunking=True`` additionally gives each shard its own
+    HardwareConfig: the serving chunk is scaled to the per-device slice
+    (``chunk_blocks / n_devices``) and ``n_shards`` is stamped so the
+    dataflow oracle models the cross-shard input stream — compiled as a
+    config variant of the same graph (``compile_from_graph``, never a
+    re-trace).  The variant applies to the single-INR ``apply_batched``
+    path only: the multi-INR path streams block-by-block with no chunk
+    loop, so there is no chunk knob to scale.
+
+Bounded caches.  ``_payloads`` (weight payloads) and ``_multi`` (stacked
+multi-INR artifacts) are LRU with configurable capacities
+(``payload_cache`` / ``multi_cache``); evictions are counted in
+``stats["payload_evictions"]`` / ``stats["multi_evictions"]``.  Payloads
+are only evicted when a store is attached (they reload on demand); with no
+store the payload cache grows unbounded rather than lose weights.
+
+Perf counters.  ``stats`` carries wall-clock phase totals so the async
+overlap win is observable: ``host_group_s`` (request grouping + padding),
+``device_exec_s`` (blocked-on-device time), ``queue_wait_s`` (async only:
+time dispatched work sat in the in-flight queue before retrieval).
 """
 
 from __future__ import annotations
 
 import math
+import time
 from collections import OrderedDict
 
 import jax
@@ -42,9 +66,36 @@ from repro.serve.multi_inr import MultiINRArtifact, const_payload, pad_rows
 from repro.serve.store import ArtifactStore, as_store
 
 
+class _LRU(OrderedDict):
+    """Tiny LRU: ``get`` refreshes recency; ``put`` evicts the least
+    recently used entry past ``cap`` WHEN the guard allows eviction."""
+
+    def __init__(self, cap: int):
+        super().__init__()
+        self.cap = int(cap)
+
+    def get(self, key, default=None):
+        v = super().get(key, default)
+        if key in self:
+            self.move_to_end(key)
+        return v
+
+    def put(self, key, value, *, evictable: bool = True) -> int:
+        """Insert and evict down to cap; returns evictions performed."""
+        self[key] = value
+        self.move_to_end(key)
+        evicted = 0
+        if evictable:
+            while len(self) > self.cap:
+                self.popitem(last=False)
+                evicted += 1
+        return evicted
+
+
 class ServingEngine:
     def __init__(self, store: "ArtifactStore | str | None" = None, *,
-                 sharding=None, shard_chunking: bool = False):
+                 sharding=None, shard_chunking: bool = False,
+                 payload_cache: int = 256, multi_cache: int = 32):
         self.store = as_store(store)
         self.sharding = sharding            # distributed.sharding.ShardingPolicy
         self.shard_chunking = bool(shard_chunking)
@@ -52,11 +103,14 @@ class ServingEngine:
         self._artifacts: dict[str, object] = {}         # sig -> CompiledGradient
         self._base_wid: dict[str, str] = {}             # sig -> base weight id
         self._variants: dict[tuple, object] = {}        # (sig, n_dev) -> variant
-        self._payloads: dict[tuple[str, str], dict] = {}
-        self._multi: dict[tuple, MultiINRArtifact] = {}
+        self._payloads: _LRU = _LRU(payload_cache)      # (sig, wid) -> payload
+        self._multi: _LRU = _LRU(multi_cache)           # (sig, wids) -> stack
         self.stats = {"requests": 0, "rows": 0, "padded_rows": 0,
                       "groups": 0, "multi_groups": 0, "restores": 0,
-                      "sharded_batches": 0}
+                      "sharded_batches": 0, "k_sharded_batches": 0,
+                      "payload_evictions": 0, "multi_evictions": 0,
+                      "host_group_s": 0.0, "device_exec_s": 0.0,
+                      "queue_wait_s": 0.0}
 
     # -- registration ------------------------------------------------------
 
@@ -75,7 +129,7 @@ class ServingEngine:
             if sig not in self._artifacts:
                 self._artifacts[sig] = cg
                 self._base_wid[sig] = wid
-            self._payloads[(sig, wid)] = const_payload(cg)
+            self._put_payload(sig, wid, const_payload(cg))
         else:
             if signature is None:
                 raise ValueError("register needs an artifact or a signature")
@@ -104,13 +158,19 @@ class ServingEngine:
             self.stats["restores"] += 1
         return cg
 
+    def _put_payload(self, sig: str, wid: str, payload: dict) -> None:
+        # payloads reload from the store; without one, eviction loses the
+        # only copy of the weights — grow instead
+        self.stats["payload_evictions"] += self._payloads.put(
+            (sig, wid), payload, evictable=self.store is not None)
+
     def _payload(self, sig: str, wid: str) -> dict:
         p = self._payloads.get((sig, wid))
         if p is None:
             if self.store is None:
                 raise KeyError(f"unknown weights {wid!r} and no store")
             p = self.store.load_weights(sig, wid)
-            self._payloads[(sig, wid)] = p
+            self._put_payload(sig, wid, p)
         return p
 
     def _multi_artifact(self, sig: str, wids: tuple[str, ...]):
@@ -119,8 +179,9 @@ class ServingEngine:
         if m is None:
             base = self._artifact(sig)
             m = MultiINRArtifact(base, [self._payload(sig, w) for w in wids],
-                                 list(wids))
-            self._multi[key] = m
+                                 list(wids), sharding=self.sharding)
+            # stacks rebuild from payloads, so they are always evictable
+            self.stats["multi_evictions"] += self._multi.put(key, m)
         return m
 
     # -- sharding ----------------------------------------------------------
@@ -148,7 +209,9 @@ class ServingEngine:
     def _serving_artifact(self, sig: str):
         """The artifact a single-INR group executes: the base, or — under
         ``shard_chunking`` — a per-shard-config variant compiled from the
-        SAME graph (chunk scaled to the per-device slice; no re-trace)."""
+        SAME graph (chunk scaled to the per-device slice, ``n_shards``
+        stamped so the dataflow oracle models the cross-shard input stream;
+        no re-trace)."""
         cg = self._artifact(sig)
         n = self._n_devices()
         if not self.shard_chunking or n == 1:
@@ -158,7 +221,8 @@ class ServingEngine:
         if variant is None:
             from repro.core.pipeline import compile_from_graph
             shard_cfg = cg.config.replace(
-                chunk_blocks=max(1, cg.config.chunk_blocks // n))
+                chunk_blocks=max(1, cg.config.chunk_blocks // n),
+                n_shards=n)
             if shard_cfg == cg.config:
                 variant = cg
             else:
@@ -172,7 +236,10 @@ class ServingEngine:
 
     def serve(self, requests):
         """Execute a batch of ``(inr_id, coords)`` queries; returns one
-        output tuple per request, in request order."""
+        output tuple per request, in request order.  Synchronous: each
+        signature group is grouped, padded, dispatched, and BLOCKED on
+        before the next (the baseline the async engine overlaps)."""
+        t0 = time.perf_counter()
         requests = list(requests)
         self.stats["requests"] += len(requests)
         results: list = [None] * len(requests)
@@ -189,18 +256,24 @@ class ServingEngine:
         for inr_id in per_inr:
             sig, _ = self._routes[inr_id]
             by_sig.setdefault(sig, []).append(inr_id)
+        self.stats["host_group_s"] += time.perf_counter() - t0
 
         for sig, inr_ids in by_sig.items():
             self.stats["groups"] += 1
+            t0 = time.perf_counter()
             coords_per_inr = {
                 i: (jnp.concatenate([c for _, c in per_inr[i]])
                     if len(per_inr[i]) > 1 else per_inr[i][0][1])
                 for i in inr_ids}
+            self.stats["host_group_s"] += time.perf_counter() - t0
+            t0 = time.perf_counter()
             if len(inr_ids) == 1:
                 outs = {inr_ids[0]: self._serve_single(
                     sig, inr_ids[0], coords_per_inr[inr_ids[0]])}
             else:
                 outs = self._serve_multi(sig, inr_ids, coords_per_inr)
+            jax.block_until_ready(outs)
+            self.stats["device_exec_s"] += time.perf_counter() - t0
             for inr_id in inr_ids:
                 row = 0
                 for k, c in per_inr[inr_id]:
@@ -219,7 +292,10 @@ class ServingEngine:
             # not the base artifact's weight set: run the K=1 multi path
             # with this INR's payload (resident swap, no recompilation)
             m = self._multi_artifact(sig, (wid,))
-            outs = m.apply_batched(self._place(coords[None], 1))
+            batch = coords[None]
+            if not m.k_sharded:
+                batch = self._place(batch, 1)
+            outs = m.apply_batched(batch)
             return tuple(o[0] for o in outs)
         return cg.apply_batched(self._place(coords, 0))
 
@@ -235,7 +311,12 @@ class ServingEngine:
                            for i in inr_ids])            # [K, n_pad, ...]
         self.stats["rows"] += sum(counts)
         self.stats["padded_rows"] += n_pad * len(counts) - sum(counts)
-        outs = m.apply_batched(self._place(batch, 1))    # each [K, n_pad, ...]
+        if m.k_sharded:
+            # the artifact places the K axis itself (rows stay shard-local)
+            self.stats["k_sharded_batches"] += 1
+            outs = m.apply_batched(batch)                # each [K, n_pad, ...]
+        else:
+            outs = m.apply_batched(self._place(batch, 1))
         return {i: tuple(o[k, :counts[k]] for o in outs)
                 for k, i in enumerate(inr_ids)}
 
@@ -243,14 +324,19 @@ class ServingEngine:
 
     def describe(self) -> str:
         n_dev = self._n_devices()
+        st = self.stats
         lines = [f"ServingEngine: {len(self._routes)} INRs over "
                  f"{len(self._artifacts)} in-process artifacts "
-                 f"({len(self._multi)} multi-INR stacks), "
+                 f"({len(self._multi)}/{self._multi.cap} multi-INR stacks, "
+                 f"{len(self._payloads)}/{self._payloads.cap} payloads), "
                  f"store={'yes' if self.store is not None else 'no'}, "
                  f"devices={n_dev}"
                  + (f" [per-shard chunking]" if self.shard_chunking
                     and n_dev > 1 else ""),
-                 f"  stats: {self.stats}"]
+                 f"  stats: {st}",
+                 f"  phases: host_group {st['host_group_s'] * 1e3:.1f}ms | "
+                 f"device_exec {st['device_exec_s'] * 1e3:.1f}ms | "
+                 f"queue_wait {st['queue_wait_s'] * 1e3:.1f}ms"]
         for inr_id in sorted(self._routes):
             sig, wid = self._routes[inr_id]
             lines.append(f"  {inr_id} -> {sig} / {wid}")

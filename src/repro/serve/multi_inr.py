@@ -22,9 +22,22 @@ INR's payload from a params pytree WITHOUT compiling it, by matching the
 base artifact's Const values against the template params (random init makes
 the match unique; shared literals — w0 scalars, reverse-mode seeds — match
 nothing and stay shared).
+
+K-AXIS SHARDING (DESIGN.md §8).  At fleet scale the stacked residents ARE
+the large tensor — thousands of weight sets vs one small query block — so
+``MultiINRArtifact(..., sharding=policy)`` shards the stacked [K] axis
+across the policy's mesh: every resident leaf is placed K-sharded
+(``ACT_RULES["inr"]``), query batches are placed with the SAME K axis
+sharded and the rows axis per-shard-local, and jit's SPMD partitioner
+splits the vmapped block pipeline into per-shard lanes with no cross-shard
+collective in the hot loop (each INR's serve is independent).  When K does
+not divide the mesh, the policy's divisibility fallback replicates —
+identical numerics, no sharding.
 """
 
 from __future__ import annotations
+
+import math
 
 import jax
 import jax.numpy as jnp
@@ -107,10 +120,11 @@ class MultiINRArtifact:
     over that axis.
     """
 
-    def __init__(self, base, payloads, inr_ids=None):
+    def __init__(self, base, payloads, inr_ids=None, *, sharding=None):
         if not payloads:
             raise ValueError("need at least one weight payload")
         self.base = base
+        self.sharding = sharding       # distributed.sharding.ShardingPolicy
         self.inr_ids = (list(inr_ids) if inr_ids is not None
                         else list(range(len(payloads))))
         if len(self.inr_ids) != len(payloads):
@@ -135,7 +149,40 @@ class MultiINRArtifact:
         # stack: resident leaves gain the [K] axis the block fn is vmapped over
         self.residents = {nid: jnp.stack([r[nid] for r in per_inr])
                           for nid in per_inr[0]}
+        # K-axis sharding: place every stacked resident before the jit below
+        # captures them, so the weight fleet lives sharded from the start
+        self._k_sharding = self._resolve_k_sharding()
+        if self._k_sharding is not None:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            mesh, ax = self._k_sharding
+            self.residents = {
+                nid: jax.device_put(v, NamedSharding(mesh, P(ax)))
+                for nid, v in self.residents.items()}
         self._serve = jax.jit(self._make_serve())
+
+    def _resolve_k_sharding(self):
+        """(mesh, k_axis) when the policy shards the K axis, else None (no
+        policy, single device, or K not divisible -> replicate)."""
+        if self.sharding is None:
+            return None
+        from jax.sharding import PartitionSpec as P
+        spec = self.sharding.act_spec((self.n_inrs,), ("inr",))
+        if spec == P():
+            return None
+        return self.sharding.mesh, spec[0]
+
+    @property
+    def k_sharded(self) -> bool:
+        return self._k_sharding is not None
+
+    def place_batch(self, xb):
+        """Place a [nb, K, block, ...] block batch to match the residents:
+        K axis sharded, the block (rows) axis per-shard-local."""
+        if self._k_sharding is None:
+            return xb
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        mesh, ax = self._k_sharding
+        return jax.device_put(xb, NamedSharding(mesh, P(None, ax)))
 
     @property
     def n_inrs(self) -> int:
@@ -149,6 +196,23 @@ class MultiINRArtifact:
         def serve(xb):                 # [n_blocks, K, block, ...features]
             return jax.lax.map(lambda b: vblock(residents, b), xb)
         return serve
+
+    def apply_chunk(self, xb):
+        """One jitted chunk step over an already-blocked batch: ``xb`` is
+        [n_blocks, K, block, ...features]; returns the streamed outputs,
+        each [n_blocks, K, block, ...].  The multi-INR analogue of
+        ``CompiledGradient.apply_chunk`` — what the async engine's
+        continuous-batching loop dispatches; shape-stable chunks (a fixed
+        ``chunk_blocks`` x K) hit one compiled trace."""
+        return self._serve(self.place_batch(xb))
+
+    def resident_output(self, o: int, n: int):
+        """A resident output for ``n`` rows, leading [K] axis."""
+        return self._resident_output(o, n)
+
+    def streamed_outputs(self) -> list[int]:
+        return [o for o in self.base.graph.outputs
+                if o not in self.base.plan.resident]
 
     def apply_batched(self, coords):
         """Serve every INR's queries in one batched streaming pass.
@@ -189,7 +253,7 @@ class MultiINRArtifact:
         nb = coords.shape[1] // block
         xb = jnp.moveaxis(
             coords.reshape(K, nb, block, *coords.shape[2:]), 0, 1)
-        outs = self._serve(xb)               # each [nb, K, block, ...]
+        outs = self._serve(self.place_batch(xb))   # each [nb, K, block, ...]
         streamed = iter(
             jnp.moveaxis(o, 0, 1).reshape(K, nb * block, *o.shape[3:])[:, :n]
             for o in outs)
@@ -206,7 +270,7 @@ class MultiINRArtifact:
         return v
 
     @classmethod
-    def from_store(cls, store, signature: str, inr_ids):
+    def from_store(cls, store, signature: str, inr_ids, *, sharding=None):
         """Build from persisted weight sets: one ``load`` for the base
         artifact (no trace) plus one weight-payload read per INR."""
         inr_ids = list(inr_ids)
@@ -214,10 +278,16 @@ class MultiINRArtifact:
             raise ValueError("need at least one inr_id")
         base = store.load(signature, inr_id=inr_ids[0])
         payloads = [store.load_weights(signature, i) for i in inr_ids]
-        return cls(base, payloads, inr_ids)
+        return cls(base, payloads, inr_ids, sharding=sharding)
 
     def describe(self) -> str:
+        shard = ""
+        if self._k_sharding is not None:
+            mesh, ax = self._k_sharding
+            n = math.prod(mesh.shape[a] for a in
+                          (ax if isinstance(ax, tuple) else (ax,)))
+            shard = f", K sharded {n}-way over {ax!r}"
         return (f"MultiINRArtifact: {self.n_inrs} INRs x "
                 f"[{self.base.config.describe()}], "
-                f"{len(self.residents)} stacked residents, "
+                f"{len(self.residents)} stacked residents{shard}, "
                 f"signature {self.base.signature}")

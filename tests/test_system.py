@@ -60,14 +60,43 @@ def test_train_loop_loss_decreases():
     assert last < first - 0.3, (first, last)
 
 
-def test_serve_session_runs():
-    from repro.configs import get_config
-    from repro.launch.serve import serve_session
+def test_async_serving_session_runs(siren_setup, tmp_path):
+    """The deployment stack end to end: compile -> persist -> async engine
+    session (submit/drain across rounds, mixed INRs) with results matching
+    the synchronous engine bit for bit."""
+    from repro.configs.siren import SirenConfig
+    from repro.core import pipeline as P
+    from repro.core.config import DEFAULT_CONFIG
+    from repro.inr.siren import siren_fn, siren_init
+    from repro.serve import AsyncServingEngine, ServingEngine
 
-    cfg = get_config("gemma3-4b").reduced()
-    res = serve_session(cfg, batch=2, prompt_len=16, gen=6)
-    assert res["tokens"].shape == (2, 6)
-    assert res["decode_tok_s"] > 0
+    scfg = SirenConfig(hidden_features=16, hidden_layers=1)
+    x = jax.random.uniform(jax.random.PRNGKey(1),
+                           (16, scfg.in_features), jnp.float32, -1, 1)
+    hw = DEFAULT_CONFIG.replace(block=8, chunk_blocks=4)
+    cgs = [P.compile_gradient(siren_fn(scfg, siren_init(
+        scfg, jax.random.PRNGKey(k))), 1, x, config=hw) for k in range(3)]
+    sync = ServingEngine(tmp_path / "s")
+    asyn = AsyncServingEngine(tmp_path / "a")
+    for k, cg in enumerate(cgs):
+        sync.register(f"i{k}", cg)
+        asyn.register(f"i{k}", cg)
+
+    rng = np.random.default_rng(0)
+    for round_ in range(3):                    # engine reused across rounds
+        reqs = [(f"i{int(rng.integers(3))}",
+                 jax.random.uniform(jax.random.PRNGKey(10 * round_ + j),
+                                    (int(rng.integers(1, 70)),
+                                     scfg.in_features), jnp.float32, -1, 1))
+                for j in range(6)]
+        want = sync.serve(reqs)
+        got = asyn.serve_async(reqs)
+        for w, g in zip(want, got):
+            for a, b in zip(w, g):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert asyn.stats["requests"] == 18
+    assert asyn.pending_rows() == 0
+    assert asyn.stats["async_chunks"] + asyn.stats["async_multi_chunks"] > 0
 
 
 def test_dryrun_single_cell_subprocess():
