@@ -10,10 +10,12 @@ workload at orders 1-3, fused vs unfused:
     (region inputs/outputs only vs every inter-segment tensor);
   * END-TO-END WALL TIME of ``apply_batched`` on the same host.
 
-With ``--json --check`` (``benchmarks/run.py``), the dispatch counts and
-predicted HBM bytes are gated against ``results/regions_baseline.json`` —
-deterministic compiler outputs, so any regression is a real scheduling
-regression, not timing noise (wall time is reported but never gated).
+With ``--json --check`` (``benchmarks/run.py``), the dispatch counts,
+predicted HBM bytes, and the scheduler's peak-live VMEM bound
+(``RegionPlan.peak_vmem_bytes``) are gated against
+``results/regions_baseline.json`` — deterministic compiler outputs, so any
+regression is a real scheduling regression, not timing noise (wall time is
+reported but never gated).
 """
 
 from repro.core import pipeline as P
@@ -23,8 +25,11 @@ from repro.core.regions import (region_hbm_bytes_per_block,
 
 from benchmarks.common import emit, time_fn
 
-# gated metrics (see check()): compiler-deterministic, timing-free
-GATED_SUFFIXES = ("dispatches_fused", "hbm_block_fused")
+# gated metrics (see check()): compiler-deterministic, timing-free.
+# peak_vmem_fused is the scheduler-v2 liveness bound (RegionPlan
+# .peak_vmem_bytes): a packing regression shows up here before it shows up
+# as extra dispatches.
+GATED_SUFFIXES = ("dispatches_fused", "hbm_block_fused", "peak_vmem_fused")
 
 
 def run(hidden: int = 64, layers: int = 2, orders=(1, 2, 3)):
@@ -66,6 +71,12 @@ def run(hidden: int = 64, layers: int = 2, orders=(1, 2, 3)):
         emit(f"regions/o{order}_hbm_block_unfused", hbm_u,
              f"bytes/block; every segment boundary; "
              f"reduction={hbm_u / max(hbm_f, 1):.1f}x", hbm_bytes=hbm_u)
+
+        peak = cg_f.region_plan.peak_vmem_bytes()
+        emit(f"regions/o{order}_peak_vmem_fused", peak,
+             f"peak live bytes of the largest fused region "
+             f"({cg_f.config.region_packing} packing, budget "
+             f"{cg_f.config.vmem_budget})", vmem_bytes=peak)
 
         us_f = time_fn(cg_f.apply, x)
         us_u = time_fn(cg_u.apply, x)

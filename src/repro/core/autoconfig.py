@@ -45,8 +45,9 @@ spelling; the serving engine stamps ``n_shards`` on its per-shard config
 variants the same way.
 
 An optional ``measure`` hook refines the analytic choice with on-device
-timings: given a callable ``config -> seconds``, the block and tile-shape
-candidates of the analytic winner are re-ranked by measured wall time.
+timings: given a callable ``config -> seconds``, the block, tile-shape, and
+``chunk_blocks`` candidates of the analytic winner are re-ranked by
+measured wall time.
 ``make_apply_batched_measure`` builds the standard hook — it compiles each
 candidate config (no re-trace) and times the artifact's real
 ``apply_batched`` serving path; ``compile_gradient(config="auto")`` feeds it
@@ -71,6 +72,10 @@ BLOCK_CANDIDATES = (8, 16, 32, 64)
 # Pallas tile-shape ladder searched under the measure hook; (bm, bn) —
 # the current tile leads so that measurement ties keep it
 TILE_LADDER = ((128, 128), (256, 128), (128, 256), (256, 256), (512, 128))
+# serving-chunk ladder (blocks per jitted lax.map chunk): the latency-vs-
+# throughput trade of apply_batched, invisible to the block-granular oracle,
+# so it is searched only under the measure hook (current value leads)
+CHUNK_LADDER = (16, 32, 64, 128)
 # greedy region-cut refinement bound (each accepted cut costs one more
 # oracle sweep over the remaining boundaries)
 MAX_REGION_CUTS = 4
@@ -210,6 +215,7 @@ def resolve_config(g: ComputeGraph, plan: SegmentPlan | None = None,
                    block_candidates: tuple[int, ...] = BLOCK_CANDIDATES,
                    mm_ladder: tuple[int, ...] = MM_LADDER,
                    tile_ladder: tuple = TILE_LADDER,
+                   chunk_ladder: tuple[int, ...] = CHUNK_LADDER,
                    measure=None) -> AutoConfigResult:
     """Pick the HardwareConfig for ``g`` with the dataflow latency oracle.
 
@@ -224,10 +230,14 @@ def resolve_config(g: ComputeGraph, plan: SegmentPlan | None = None,
     standard hook from the artifact's serving path).
 
     The search covers block granule x per-MM-segment parallelism x region
-    fusion (fused base, UNFUSED base, and greedy region-cut refinement of
-    the winner).  The returned config never scores worse than the base
-    config OR its unfused variant on the oracle, and is verified
-    deadlock-free; every scored point is in ``.candidates``.
+    fusion (fused base, UNFUSED base, the ``region_packing="sum"`` v1
+    scheduler as an extra floor — liveness packing is never chosen when the
+    PR 5 estimator scores better — and greedy region-cut refinement of the
+    winner).  The returned config never scores worse than any of those
+    floors on the oracle, and is verified deadlock-free; every scored point
+    is in ``.candidates``.  Under ``measure``, the block granule, the tile
+    shape, and ``chunk_blocks`` (serving latency vs throughput) are each
+    re-ranked by real wall time, current values leading so ties keep them.
     """
     if plan is None:
         plan = build_segment_plan(g)
@@ -243,7 +253,8 @@ def resolve_config(g: ComputeGraph, plan: SegmentPlan | None = None,
         # re-scored at acceptance); each unique point costs one oracle call
         key = (config.dataflow_block, config.mm_parallel,
                config.mm_parallel_per_segment, config.fuse_regions,
-               config.region_cuts)
+               config.region_cuts, config.region_packing,
+               config.vmem_budget, config.bm, config.bn)
         c = seen.get(key)
         if c is None:
             dead, lat = _oracle(g, plan, config)
@@ -268,6 +279,15 @@ def resolve_config(g: ComputeGraph, plan: SegmentPlan | None = None,
     unfused_cand = score(unfused_base) if base.fuse_regions else base_cand
     if unfused_cand.deadlocked:
         unfused_base, unfused_cand = base, base_cand
+    # the v1 (sum-packed) region scheduler is one more floor: liveness
+    # packing must never score worse than the PR 5 estimator it replaces
+    floors = [(base_cand.row_cycles, 0, base, base_cand),
+              (unfused_cand.row_cycles, 1, unfused_base, unfused_cand)]
+    if base.fuse_regions and base.region_packing != "sum":
+        sum_base = base.replace(region_packing="sum")
+        sum_cand = score(sum_base)
+        if not sum_cand.deadlocked:
+            floors.append((sum_cand.row_cycles, 2, sum_base, sum_cand))
 
     def finish(chosen: HardwareConfig) -> AutoConfigResult:
         final = score(chosen)
@@ -301,11 +321,12 @@ def resolve_config(g: ComputeGraph, plan: SegmentPlan | None = None,
         if best is None or key < (best[0], best[1]):
             best = (cand.row_cycles, blk, cfg)
 
-    floor = min(base_cand.row_cycles, unfused_cand.row_cycles)
+    floors.sort(key=lambda f: (f[0], f[1]))
+    floor = floors[0][0]
     if best is None or best[0] > floor:
-        # the search never beats the baselines: keep the better base
-        chosen = base if base_cand.row_cycles <= unfused_cand.row_cycles \
-            else unfused_base
+        # the search never beats the floors: keep the best of them
+        # (deterministic tie-break: base > unfused > sum-packed)
+        chosen = floors[0][2]
     else:
         chosen = best[2]
 
@@ -340,6 +361,18 @@ def resolve_config(g: ComputeGraph, plan: SegmentPlan | None = None,
         tiles = [(chosen.bm, chosen.bn)]
         tiles += [t for t in tile_ladder if t != tiles[0]]
         variants = [chosen.replace(bm=bm_, bn=bn_) for bm_, bn_ in tiles]
+        best_i = min(range(len(variants)),
+                     key=lambda i: (timed(variants[i]), i))
+        chosen = variants[best_i]
+    if measure is not None and len(chunk_ladder) > 1:
+        # chunk_blocks trades serving latency (small chunks retire sooner)
+        # against throughput (big chunks amortize the lax.map dispatch);
+        # purely a host-pipeline knob, invisible to the oracle, so it is
+        # searched only by measurement — current value first so a wall-time
+        # tie keeps it
+        chunks = [chosen.chunk_blocks]
+        chunks += [c for c in chunk_ladder if c != chunks[0]]
+        variants = [chosen.replace(chunk_blocks=c) for c in chunks]
         best_i = min(range(len(variants)),
                      key=lambda i: (timed(variants[i]), i))
         chosen = variants[best_i]

@@ -128,9 +128,12 @@ def _emit_region(L, g: ComputeGraph, plan: SegmentPlan, region, B: int):
     streams in, the region's outputs out."""
     params = ", ".join(["_r"] + [f"v{i}" for i in region.stream_inputs])
     segs = "+".join(f"s{s}" for s in region.segments)
+    tiles = region.meta.get("col_tiles", 1)
+    tiled = (f", column-tiled x{tiles} (reduction carried across bn tiles)"
+             if tiles > 1 else "")
     L.append(f"def {_region_fn_name(region)}({params}):")
     L.append(f'    """FusedRegion {segs}: one megakernel, intermediates '
-             f'in VMEM [dispatch: region]."""')
+             f'in VMEM{tiled} [dispatch: region]."""')
     blk_ref = f"v{region.stream_inputs[0]}"
     nodes = [n for sid in region.segments
              for n in plan.segments[sid].nodes]

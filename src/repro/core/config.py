@@ -61,6 +61,15 @@ class HardwareConfig:
                              occupy (inputs + weights + live intermediates
                              + outputs at the ``bm`` tile); region growth
                              stops at this budget.
+    * ``region_packing``   — how the region scheduler sizes a region's
+                             working set against ``vmem_budget``: ``"live"``
+                             (default) charges intermediates only while live
+                             (freed at last use, so regions grow longer) and
+                             column-tiles wide layers at ``bn`` when that is
+                             what makes them fit; ``"sum"`` keeps every step
+                             output charged for the whole region (the PR 5
+                             estimator — the conservative floor autoconfig
+                             scores against).
     * ``region_cuts``      — segment ids after which a region is forced to
                              end — explicit cut points (what autoconfig
                              searches on top of the greedy scheduler).
@@ -88,6 +97,7 @@ class HardwareConfig:
     bn: int = 128
     fuse_regions: bool = True
     vmem_budget: int = 8 * 1024 * 1024
+    region_packing: str = "live"
     region_cuts: tuple[int, ...] = ()
     n_shards: int = 1
     xshard_row_cost: int = 2
@@ -101,6 +111,9 @@ class HardwareConfig:
                                  f"int, got {v!r}")
         if not 0.0 <= self.fifo_alpha:
             raise ValueError(f"fifo_alpha must be >= 0, got {self.fifo_alpha}")
+        if self.region_packing not in ("live", "sum"):
+            raise ValueError(f"region_packing must be 'live' or 'sum', "
+                             f"got {self.region_packing!r}")
         # normalize overrides to a sorted tuple of int pairs so that equal
         # configs hash equal regardless of construction order
         norm = tuple(sorted((int(s), int(p))
@@ -185,7 +198,8 @@ class HardwareConfig:
                 f"mm_parallel={self.mm_parallel}{ov} "
                 f"use_pallas={self.use_pallas} fifo_alpha={self.fifo_alpha} "
                 f"bm={self.bm} bn={self.bn} "
-                f"fuse_regions={self.fuse_regions}{cuts}{shards}")
+                f"fuse_regions={self.fuse_regions} "
+                f"region_packing={self.region_packing}{cuts}{shards}")
 
 
 DEFAULT_CONFIG = HardwareConfig()

@@ -70,9 +70,46 @@ OP_ROW_COST = {
     "Erf": 2, "Rsqrt": 2, "Sqrt": 2, "Pow": 2, "IntPow": 1,
 }
 
+# the analytic defaults above, kept so a calibrated table can be undone
+_ANALYTIC_OP_ROW_COST = dict(OP_ROW_COST)
+
+# MM row cost is ``ceil(K * MM_ROW_COST_PER_K / parallelism)``; 1.0 is the
+# analytic default (one DSP op per contraction element), calibration
+# (scripts/row_cost_calibrate.py) replaces it with the measured per-K cost
+# relative to an elementwise add.
+MM_ROW_COST_PER_K = 1.0
+
 
 def op_row_cost(op: str) -> int:
     return OP_ROW_COST.get(op, 1)
+
+
+def load_op_row_cost(path=None) -> dict:
+    """Swap in a CALIBRATED per-op cost table (the JSON emitted by
+    ``scripts/row_cost_calibrate.py``, default ``results/op_row_cost.json``)
+    in place of the analytic defaults.  Explicit — never loaded at import,
+    so analyses stay deterministic unless a caller opts in.  Returns the
+    active table; ``reset_op_row_cost`` restores the analytic one."""
+    import json
+    import pathlib
+    global MM_ROW_COST_PER_K
+    if path is None:
+        path = (pathlib.Path(__file__).resolve().parents[3]
+                / "results" / "op_row_cost.json")
+    d = json.loads(pathlib.Path(path).read_text())
+    OP_ROW_COST.update({str(k): max(1, int(round(float(v))))
+                        for k, v in d.get("op_row_cost", {}).items()})
+    if d.get("mm_row_cost_per_k") is not None:
+        MM_ROW_COST_PER_K = max(1e-6, float(d["mm_row_cost_per_k"]))
+    return dict(OP_ROW_COST)
+
+
+def reset_op_row_cost():
+    """Restore the analytic OP_ROW_COST / MM defaults."""
+    global MM_ROW_COST_PER_K
+    OP_ROW_COST.clear()
+    OP_ROW_COST.update(_ANALYTIC_OP_ROW_COST)
+    MM_ROW_COST_PER_K = 1.0
 
 
 def segment_row_cost(plan: SegmentPlan, seg, mm_parallel: int) -> int:
@@ -84,7 +121,7 @@ def segment_row_cost(plan: SegmentPlan, seg, mm_parallel: int) -> int:
         mm = g.nodes[seg.meta.get("mm", seg.nodes[0])]
         lhs = g.nodes[mm.inputs[0]]
         kk = lhs.shape[-1] if lhs.shape else 1
-        cost = max(1, math.ceil(kk / max(1, mm_parallel)))
+        cost = max(1, math.ceil(kk * MM_ROW_COST_PER_K / max(1, mm_parallel)))
         for nid in seg.nodes:
             if g.nodes[nid].op not in MM_OPS:
                 cost += op_row_cost(g.nodes[nid].op)
@@ -298,17 +335,30 @@ def map_to_dataflow(g: ComputeGraph, *, block: int | None = None,
             # fused region: ONE streaming process — block i in, block i out,
             # per-block delay = summed member row costs x block rows.  The
             # megakernel holds intra-region tensors in VMEM, so they have no
-            # streams at all (they were never in use_lists).
+            # streams at all (they were never in use_lists).  A COLUMN-TILED
+            # region (meta["col_tiles"] = ceil(N / bn) > 1) is still one
+            # process, but each block runs that many INNER iterations: the
+            # read happens before the first tile, the write after the last,
+            # and the per-block delay splits evenly across the tiles.
             cost = sum(segment_row_cost(plan, plan.segments[sid_],
                                         seg_mm_parallel(plan.segments[sid_]))
                        for sid_ in u.segments)
+            tiles = max(1, u.meta.get("col_tiles", 1))
+            sub = max(1, math.ceil(block * cost / tiles))
             p = Process(f"region{u.id}")
             nb_out_max = max((nb for _, nb in out_streams), default=0)
             nb = max([nb_out_max] + nbs)
             for i in range(nb):
                 rd = tuple((s, i) for s, b in zip(ins, nbs) if i < b)
                 wr = tuple((s, i) for s, b in out_streams if i < b)
-                p.steps.append(Step(reads=rd, writes=wr, delay=block * cost))
+                if tiles == 1:
+                    p.steps.append(Step(reads=rd, writes=wr,
+                                        delay=block * cost))
+                else:
+                    p.steps.append(Step(reads=rd, delay=sub))
+                    for _ in range(tiles - 2):
+                        p.steps.append(Step(delay=sub))
+                    p.steps.append(Step(writes=wr, delay=sub))
             if p.steps:
                 procs.append(p)
             continue

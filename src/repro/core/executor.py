@@ -249,10 +249,22 @@ def _run_region(plan: SegmentPlan, region, env, res_env, block: int, B: int):
     cfg = plan.config
 
     stream = [env[nid] for nid in region.stream_inputs]
-    rows = stream[0].shape[0] if stream else block
+    n_rows = stream[0].shape[0] if stream else block
     for nid, cols in region.broadcast_inputs:
         a = _resident_val(plan, res_env, nid, block, B)
-        stream.append(jnp.broadcast_to(a, (rows, cols)))
+        stream.append(jnp.broadcast_to(a, (n_rows, cols)))
+    rows = []
+    for nid, cols in getattr(region, "bcast_rows", ()):
+        # row-const resident extra: ONE [1, C] row broadcasts inside the
+        # kernel (bit-identical to the old per-block materialization)
+        a = _resident_val(plan, res_env, nid, block, B)
+        if a.ndim >= 2:
+            a = a[:1].reshape(1, a.shape[-1])
+        elif a.ndim == 1:
+            a = a[None, :]
+        else:
+            a = a.reshape(1, 1)
+        rows.append(a)
     bias_ids = {s[4] for s in spec.steps if s[0] == "mm" and s[4] is not None}
     residents = []
     for nid in region.resident_inputs:
@@ -263,7 +275,7 @@ def _run_region(plan: SegmentPlan, region, env, res_env, block: int, B: int):
         residents.append(a)
     out_info = tuple((g.nodes[o].shape[-1], g.nodes[o].dtype)
                      for o in region.outputs)
-    outs = region_call(spec, stream, residents, out_info,
+    outs = region_call(spec, stream, rows, residents, out_info,
                        bm=cfg.bm if cfg is not None else 128)
     for nid, o in zip(region.outputs, outs):
         env[nid] = o

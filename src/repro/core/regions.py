@@ -20,8 +20,15 @@ A ``FusedRegion`` is a maximal contiguous run of plan segments that
   * are CONNECTED — each joining segment consumes at least one tensor
     produced inside the region (fusing it removes >= 1 HBM round-trip);
   * fit the VMEM BUDGET — the region's working set at the ``bm`` row tile
-    (double-buffered inputs/outputs + whole weights + every live
-    intermediate) stays within ``HardwareConfig.vmem_budget``;
+    stays within ``HardwareConfig.vmem_budget``.  The working set is sized
+    by a LIVENESS analysis (``region_packing="live"``, the default): each
+    step output is charged only from its defining step to its last use, so
+    the bound is the peak *live* bytes, not the sum of every output — and
+    when even the live peak overflows, the scheduler COLUMN-TILES wide runs
+    of steps at ``bn`` (see ``kernels.region.TileGroup``) before giving up
+    and cutting.  ``region_packing="sum"`` restores the PR 5 estimator
+    (every step output held for the whole region) as the conservative
+    floor autoconfig scores against;
   * respect the config's explicit ``region_cuts`` (the cut points
     autoconfig searches).
 
@@ -30,6 +37,12 @@ keep the classic per-segment dispatch.  The greedy schedule is deterministic
 for a given (plan, config), so region ids are stable targets, the compile
 cache stays coherent, and the emitted source / dataflow mapping / executor
 all derive from the same RegionPlan.
+
+Row-constant resident chain extras are classified as ``bcast_rows``: they
+enter the megakernel as one ``[1, C]`` VMEM row (broadcast on chip) instead
+of a dispatcher-materialized ``[block, C]`` HBM operand — bit-identical and
+strictly less HBM traffic.  Resident extras that are NOT row-constant keep
+the streamed-broadcast fallback (``broadcast_inputs``).
 
 One deliberate divergence: the region plan describes the SCHEDULE, and the
 emitted source / dataflow mapping always follow it, but the executor engages
@@ -92,8 +105,12 @@ class FusedRegion:
 
     ``stream_inputs``    — external streamed tensors, read from HBM per block.
     ``broadcast_inputs`` — ``(node id, cols)`` resident chain extras the
-                           dispatcher broadcasts to block shape (they enter
-                           the kernel as streamed operands).
+                           dispatcher broadcasts to block shape (streamed
+                           fallback for extras that are NOT row-constant).
+    ``bcast_rows``       — ``(node id, row cols)`` row-constant resident
+                           chain extras passed to the kernel as one
+                           ``[1, C]`` VMEM row each (broadcast on chip,
+                           no per-block HBM traffic).
     ``resident_inputs``  — whole-tensor VMEM operands (weights, biases).
     ``outputs``          — tensors leaving the region (consumed by another
                            region or graph outputs), written to HBM once.
@@ -101,6 +118,9 @@ class FusedRegion:
                            (multi-segment) regions; None for singletons,
                            which dispatch through the classic per-segment
                            path.
+    ``meta``             — ``vmem_bytes`` (the packing estimate), and
+                           ``col_tiles`` (max column tiles over the spec's
+                           tile groups; 1 = untiled).
     """
     id: int
     segments: tuple[int, ...]
@@ -108,6 +128,7 @@ class FusedRegion:
     broadcast_inputs: tuple[tuple[int, int], ...]
     resident_inputs: tuple[int, ...]
     outputs: tuple[int, ...]
+    bcast_rows: tuple[tuple[int, int], ...] = ()
     spec: object = None
     meta: dict = field(default_factory=dict, compare=False)
 
@@ -115,12 +136,19 @@ class FusedRegion:
     def fused(self) -> bool:
         return len(self.segments) > 1 and self.spec is not None
 
+    @property
+    def col_tiles(self) -> int:
+        """Max column tiles across the region's tile groups (1 = untiled)."""
+        return self.meta.get("col_tiles", 1)
+
     def describe(self, plan: SegmentPlan) -> str:
         segs = "+".join(f"s{s}" for s in self.segments)
         tag = "fused" if self.fused else \
             plan.segments[self.segments[0]].kind
-        return (f"region{self.id}[{tag}] {segs} "
-                f"in={len(self.stream_inputs)}+{len(self.broadcast_inputs)} "
+        tiles = f" x{self.col_tiles}bn" if self.col_tiles > 1 else ""
+        return (f"region{self.id}[{tag}{tiles}] {segs} "
+                f"in={len(self.stream_inputs)}"
+                f"+{len(self.bcast_rows) + len(self.broadcast_inputs)} "
                 f"out={len(self.outputs)}")
 
 
@@ -147,6 +175,15 @@ class RegionPlan:
         return {"regions": len(self.regions), "fused": len(fused),
                 "segments_fused": sum(len(r.segments) for r in fused),
                 "dispatches": len(self.regions)}
+
+    def peak_vmem_bytes(self) -> int:
+        """Largest fused-region working set of the plan (the number the
+        ``regions --check`` gate tracks); 0 when nothing fused."""
+        fused = self.fused_regions()
+        if not fused:
+            return 0
+        return max(region_vmem_bytes(self.plan, r, self.config)
+                   for r in fused)
 
     def describe(self) -> str:
         c = self.counts()
@@ -203,18 +240,33 @@ def _whole_bytes(g, nid: int) -> int:
     return n.size * np.dtype(n.dtype).itemsize
 
 
+def _is_row_extra(plan: SegmentPlan, nid: int) -> bool:
+    """True when a resident chain extra is the same for every streamed row,
+    so one ``[1, C]`` copy in VMEM broadcasts bit-identically on chip."""
+    n = plan.graph.nodes[nid]
+    return (nid in plan.rowconst or len(n.shape) <= 1
+            or (len(n.shape) >= 2 and n.shape[0] == 1))
+
+
+def _row_cols(plan: SegmentPlan, nid: int) -> int:
+    n = plan.graph.nodes[nid]
+    return n.shape[-1] if n.shape else 1
+
+
 def _region_io(plan: SegmentPlan, members, consumers=None):
-    """(stream_inputs, broadcast_inputs, resident_inputs, outputs, steps)
-    of a would-be region, or None when the members cannot share one kernel
-    (conflicting broadcast shapes).  ``consumers`` is the graph consumer
-    map — pass it when calling in a loop (building it is O(graph))."""
+    """(stream_inputs, bcast_rows, broadcast_inputs, resident_inputs,
+    outputs, steps) of a would-be region, or None when the members cannot
+    share one kernel (conflicting streamed-broadcast shapes).  ``consumers``
+    is the graph consumer map — pass it when calling in a loop (building it
+    is O(graph))."""
     g = plan.graph
     if consumers is None:
         consumers = g.consumers()
     node_set = {n for seg, _ in members for n in seg.nodes}
     produced = {seg.output for seg, _ in members}
     stream_in: list[int] = []
-    bcast: dict[int, int] = {}
+    rows: dict[int, int] = {}          # row-const resident extras -> row cols
+    bcast: dict[int, int] = {}         # streamed-broadcast fallback -> cols
     res_in: list[int] = []
     steps = []
 
@@ -236,9 +288,12 @@ def _region_io(plan: SegmentPlan, members, consumers=None):
                 if e in produced:
                     continue
                 if e in plan.resident:
-                    if bcast.get(e, cols) != cols:
-                        return None            # one extra, two block shapes
-                    bcast[e] = cols
+                    if _is_row_extra(plan, e):
+                        rows[e] = _row_cols(plan, e)
+                    else:
+                        if bcast.get(e, cols) != cols:
+                            return None        # one extra, two block shapes
+                        bcast[e] = cols
                 else:
                     want_stream(e)
         else:
@@ -251,30 +306,179 @@ def _region_io(plan: SegmentPlan, members, consumers=None):
     outputs = [seg.output for seg, _ in members
                if seg.output in g.outputs
                or any(c not in node_set for c in consumers[seg.output])]
-    return (tuple(stream_in), tuple(sorted(bcast.items())), tuple(res_in),
+    return (tuple(stream_in), tuple(sorted(rows.items())),
+            tuple(sorted(bcast.items())), tuple(res_in),
             tuple(outputs), tuple(steps))
 
 
-def _vmem_estimate(plan: SegmentPlan, io, config: HardwareConfig) -> int:
-    """Working-set bytes of a region at the ``bm`` row tile: inputs and
-    outputs double-buffered (Pallas pipelines the next tile while computing),
-    whole weights, and every step output held live (conservative — values
-    could be freed at last use, but the bound keeps the schedule safe)."""
+# ---------------------------------------------------------------------------
+# column tiling: find runs of wide steps evaluable bn columns at a time
+# ---------------------------------------------------------------------------
+
+def _step_operands(step):
+    """Streamed-value operands of one step (resident w/bias excluded)."""
+    if step[0] == CHAIN:
+        return (step[2],) + tuple(step[4])
+    return (step[2],)
+
+
+def _node_width(g, nid: int) -> int:
+    n = g.nodes[nid]
+    return n.shape[-1] if n.shape else 1
+
+
+def plan_col_tiles(plan: SegmentPlan, io, config: HardwareConfig) -> tuple:
+    """Find column-tilable runs of the step program: maximal contiguous runs
+    of steps with one shared output width ``W > bn`` whose outputs are
+    consumed ONLY by later members or by the immediately following "reducer"
+    MM (which contracts the ``W`` axis).  Such a run evaluates ``bn``
+    columns at a time with the reducer accumulating partial products, so the
+    wide intermediates cost ``bm*bn`` VMEM instead of ``bm*W`` —
+    see ``kernels.region.TileGroup`` for the execution contract."""
+    from repro.kernels.region import TileGroup
     g = plan.graph
-    stream_in, bcast, res_in, outputs, steps = io
+    bn = config.bn
+    stream_in, rows, bcast, res_in, outputs, steps = io
+    out_set = set(outputs)
+    groups = []
+    i = 0
+    while i < len(steps):
+        W = _node_width(g, steps[i][1])
+        if W <= bn:
+            i += 1
+            continue
+        # grow a run of width-W steps starting at i
+        members: list[int] = []
+        j = i
+        while j < len(steps):
+            step = steps[j]
+            out = step[1]
+            if members and step[0] == MM and step[2] in members:
+                break                          # reducer candidate
+            if _node_width(g, out) != W or out in out_set:
+                break
+            ok = True
+            if step[0] == CHAIN:
+                for op in _step_operands(step):
+                    if op in members:
+                        continue
+                    if _node_width(g, op) not in (1, W):
+                        ok = False
+                        break
+            else:                              # member MM: w cols sliced
+                if step[2] in members:
+                    ok = False                  # lhs must stay external
+                else:
+                    wn = g.nodes[step[3]]
+                    ok = len(wn.shape) == 2 and wn.shape[1] == W
+            if not ok:
+                break
+            members.append(out)
+            j += 1
+        valid = bool(members) and j < len(steps)
+        if valid:
+            red = steps[j]
+            valid = (red[0] == MM and red[2] in members
+                     and len(g.nodes[red[3]].shape) == 2
+                     and g.nodes[red[3]].shape[0] == W)
+        if valid:
+            # member outputs must not escape past the reducer
+            mset = set(members)
+            for later in steps[j + 1:]:
+                if any(op in mset for op in _step_operands(later)):
+                    valid = False
+                    break
+        if valid:
+            groups.append(TileGroup(members=tuple(members),
+                                    reducer=red[1], width=W, bn=bn))
+            i = j + 1
+        else:
+            i += 1
+    return tuple(groups)
+
+
+# ---------------------------------------------------------------------------
+# VMEM packing: size the working set by peak LIVE bytes
+# ---------------------------------------------------------------------------
+
+def _vmem_estimate(plan: SegmentPlan, io, config: HardwareConfig,
+                   tiles=(), packing: str | None = None) -> int:
+    """Working-set bytes of a region at the ``bm`` row tile.
+
+    Fixed charges (live for the whole region): streamed inputs and region
+    outputs double-buffered (Pallas pipelines the next tile while
+    computing), one ``[1, C]`` row per row-const extra, streamed-broadcast
+    fallbacks double-buffered, whole resident weights.
+
+    Intermediates: ``packing="sum"`` holds EVERY step output live for the
+    whole region (the PR 5 bound); ``packing="live"`` (default) walks the
+    step program charging each output only from its defining step to its
+    last use — the peak of that walk is what competes for the budget, so it
+    is never above the sum bound.  Members of a column-tiled run are
+    charged at ``bm * min(bn, W)`` (one tile at a time)."""
+    g = plan.graph
+    if packing is None:
+        packing = config.region_packing
+    stream_in, rows, bcast, res_in, outputs, steps = io
     bm = config.bm
-    total = 0
+    fixed = 0
     for nid in stream_in:
-        total += 2 * bm * _row_bytes(g, nid)
+        fixed += 2 * bm * _row_bytes(g, nid)
+    for nid, cols in rows:
+        fixed += cols * np.dtype(g.nodes[nid].dtype).itemsize
     for nid, cols in bcast:
-        total += 2 * bm * cols * np.dtype(g.nodes[nid].dtype).itemsize
+        fixed += 2 * bm * cols * np.dtype(g.nodes[nid].dtype).itemsize
     for nid in res_in:
-        total += _whole_bytes(g, nid)
-    for step in steps:
-        total += bm * _row_bytes(g, step[1])
+        fixed += _whole_bytes(g, nid)
     for nid in outputs:
-        total += 2 * bm * _row_bytes(g, nid)
-    return total
+        fixed += 2 * bm * _row_bytes(g, nid)
+
+    if packing == "sum":
+        return fixed + sum(bm * _row_bytes(g, s[1]) for s in steps)
+
+    # liveness walk: out defined at its step, freed after its last use
+    tiled_width: dict[int, int] = {}
+    last_use: dict[int, int] = {}
+    reducer_idx: dict[int, int] = {}
+    for idx, step in enumerate(steps):
+        reducer_idx[step[1]] = idx
+    for group in tiles:
+        for m in group.members:
+            tiled_width[m] = min(group.bn, group.width)
+            last_use[m] = reducer_idx[group.reducer]
+    for idx, step in enumerate(steps):
+        for op in _step_operands(step):
+            if op in reducer_idx and op not in tiled_width:
+                last_use[op] = idx
+
+    out_set = set(outputs)             # charged in fixed, skip in the walk
+    live: dict[int, int] = {}
+    peak = 0
+    for idx, step in enumerate(steps):
+        out = step[1]
+        if out not in out_set:
+            itemsize = np.dtype(g.nodes[out].dtype).itemsize
+            width = tiled_width.get(out)
+            nbytes = (bm * width * itemsize if width is not None
+                      else bm * _row_bytes(g, out))
+            live[out] = nbytes
+        peak = max(peak, sum(live.values()))
+        for nid in [n for n, lu in last_use.items() if lu == idx]:
+            live.pop(nid, None)
+    return fixed + peak
+
+
+def _pack_region(plan: SegmentPlan, io, config: HardwareConfig):
+    """(vmem estimate, tile groups) for a would-be region: untiled when it
+    fits the budget (or under ``"sum"`` packing, which never tiles — it is
+    the PR 5 floor), column-tiled otherwise when a tilable run exists."""
+    est = _vmem_estimate(plan, io, config)
+    if config.region_packing == "sum" or est <= config.vmem_budget:
+        return est, ()
+    tiles = plan_col_tiles(plan, io, config)
+    if not tiles:
+        return est, ()
+    return _vmem_estimate(plan, io, config, tiles=tiles), tiles
 
 
 def region_vmem_bytes(plan: SegmentPlan, region: FusedRegion,
@@ -289,7 +493,7 @@ def region_vmem_bytes(plan: SegmentPlan, region: FusedRegion,
                for sid in region.segments]
     io = _region_io(plan, members, consumers)
     assert io is not None
-    return _vmem_estimate(plan, io, config)
+    return _pack_region(plan, io, config)[0]
 
 
 def segment_hbm_bytes_per_block(plan: SegmentPlan, block: int) -> int:
@@ -308,7 +512,9 @@ def region_hbm_bytes_per_block(plan: SegmentPlan, rplan: RegionPlan,
                                block: int) -> int:
     """HBM traffic of ONE pipeline block under region dispatch: fused
     regions read only region inputs and write only region outputs —
-    intra-region tensors never leave VMEM."""
+    intra-region tensors never leave VMEM.  Row-const extras
+    (``bcast_rows``) charge nothing per block: one ``[1, C]`` row is read
+    once for the whole stream, not per block."""
     g = plan.graph
     total = 0
     for r in rplan.regions:
@@ -363,17 +569,22 @@ def build_region_plan(plan: SegmentPlan,
             r = singleton(cur[0][0])
         else:
             io = _region_io(plan, cur, consumers)
-            stream_in, bcast, res_in, outputs, steps = io
+            stream_in, rows, bcast, res_in, outputs, steps = io
+            est, tiles = _pack_region(plan, io, config)
             from repro.kernels.region import RegionKernelSpec
             spec = RegionKernelSpec(
                 steps=steps,
                 stream_inputs=stream_in + tuple(n for n, _ in bcast),
-                residents=res_in, outputs=outputs)
+                residents=res_in, outputs=outputs,
+                bcast_rows=tuple(n for n, _ in rows),
+                tile_groups=tiles)
+            col_tiles = max((t.n_tiles for t in tiles), default=1)
             r = FusedRegion(
                 id=len(regions), segments=tuple(s.id for s, _ in cur),
                 stream_inputs=stream_in, broadcast_inputs=bcast,
-                resident_inputs=res_in, outputs=outputs, spec=spec,
-                meta={"vmem_bytes": _vmem_estimate(plan, io, config)})
+                resident_inputs=res_in, outputs=outputs,
+                bcast_rows=rows, spec=spec,
+                meta={"vmem_bytes": est, "col_tiles": col_tiles})
         for sid in r.segments:
             region_of[sid] = r.id
         regions.append(r)
@@ -394,7 +605,7 @@ def build_region_plan(plan: SegmentPlan,
             joinable = (cur[-1][0].id not in cuts
                         and any(i in produced for i in seg.stream_inputs)
                         and io is not None
-                        and _vmem_estimate(plan, io, config)
+                        and _pack_region(plan, io, config)[0]
                         <= config.vmem_budget)
             if not joinable:
                 flush()
@@ -420,8 +631,10 @@ def region_dispatch_table(plan: SegmentPlan,
     for r in rplan.regions:
         if r.fused:
             segs = f"s{r.segments[0]}-s{r.segments[-1]}"
+            tiles = f" x{r.col_tiles}bn" if r.col_tiles > 1 else ""
             out.append((r.id, FUSED_REGION,
-                        f"{REGION_KERNEL}[{len(r.segments)} segs {segs}]"))
+                        f"{REGION_KERNEL}[{len(r.segments)} segs "
+                        f"{segs}{tiles}]"))
         else:
             seg = plan.segments[r.segments[0]]
             out.append((seg.id, seg.kind, segment_dispatch(plan, seg)))

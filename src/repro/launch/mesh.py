@@ -28,17 +28,16 @@ def make_production_mesh(*, multi_pod: bool = False):
             f"mesh {shape} needs {ndev} devices, found {len(devs)}; "
             "run under XLA_FLAGS=--xla_force_host_platform_device_count=512 "
             "(launch/dryrun.py does this automatically)")
-    return jax.make_mesh(
-        shape, axes, devices=devs[:ndev],
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    from repro.distributed.sharding import make_mesh
+    return make_mesh(shape, axes, devices=devs[:ndev])
 
 
 def make_debug_mesh(n_data: int = 2, n_model: int = 2):
     """Small mesh for in-process sharding tests (subprocess with forced devices)."""
     ndev = n_data * n_model
-    return jax.make_mesh(
-        (n_data, n_model), ("data", "model"), devices=jax.devices()[:ndev],
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.distributed.sharding import make_mesh
+    return make_mesh((n_data, n_model), ("data", "model"),
+                     devices=jax.devices()[:ndev])
 
 
 # v5e hardware constants for the roofline model

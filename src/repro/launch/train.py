@@ -36,8 +36,8 @@ def make_mesh_if_possible(min_devices: int = 2):
     if n < min_devices:
         return None
     model = 2 if n % 2 == 0 else 1
-    return jax.make_mesh((n // model, model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.distributed.sharding import make_mesh
+    return make_mesh((n // model, model), ("data", "model"))
 
 
 def train_loop(cfg, shape: ShapeConfig, hp: steplib.HParams, *, steps: int,

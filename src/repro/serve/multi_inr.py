@@ -23,6 +23,19 @@ base artifact's Const values against the template params (random init makes
 the match unique; shared literals — w0 scalars, reverse-mode seeds — match
 nothing and stay shared).
 
+RESIDENT DOUBLE BUFFERING (DESIGN.md §7).  The vmap path interleaves every
+lane's math inside one XLA program, which leaves the per-lane resident
+weight swap implicit.  ``resident_double_buffer=True`` instead serves the
+K lanes through ``kernels.region.region_call_stacked`` when the whole
+pipeline is region megakernels: ONE pallas_call with grid (lane, row tile),
+each lane's residents one grid-block on the slow axis — the Pallas pipeline
+prefetches lane k+1's weights into VMEM while lane k computes its last row
+tile, overlapping the weight swap with compute.  Numerics are the region
+megakernel's (bit-identical per lane to the base artifact's region path);
+the flag silently falls back to the vmap path when the plan has non-region
+units, streamed-broadcast extras, or a K-sharded mesh
+(``.double_buffered`` reports which path serves).
+
 K-AXIS SHARDING (DESIGN.md §8).  At fleet scale the stacked residents ARE
 the large tensor — thousands of weight sets vs one small query block — so
 ``MultiINRArtifact(..., sharding=policy)`` shards the stacked [K] axis
@@ -120,7 +133,8 @@ class MultiINRArtifact:
     over that axis.
     """
 
-    def __init__(self, base, payloads, inr_ids=None, *, sharding=None):
+    def __init__(self, base, payloads, inr_ids=None, *, sharding=None,
+                 resident_double_buffer: bool = False):
         if not payloads:
             raise ValueError("need at least one weight payload")
         self.base = base
@@ -158,7 +172,11 @@ class MultiINRArtifact:
             self.residents = {
                 nid: jax.device_put(v, NamedSharding(mesh, P(ax)))
                 for nid, v in self.residents.items()}
-        self._serve = jax.jit(self._make_serve())
+        self.double_buffered = (bool(resident_double_buffer)
+                                and self._stacked_applicable())
+        self._serve = jax.jit(self._make_serve_stacked()
+                              if self.double_buffered
+                              else self._make_serve())
 
     def _resolve_k_sharding(self):
         """(mesh, k_axis) when the policy shards the K axis, else None (no
@@ -195,6 +213,84 @@ class MultiINRArtifact:
 
         def serve(xb):                 # [n_blocks, K, block, ...features]
             return jax.lax.map(lambda b: vblock(residents, b), xb)
+        return serve
+
+    def _stacked_applicable(self) -> bool:
+        """True when the whole pipeline can serve through the K-stacked
+        region megakernel: every unit a fused region with no streamed-
+        broadcast extras, single coordinate input, Pallas dispatch on, no
+        K-sharded mesh (a sharded fleet keeps the SPMD vmap path)."""
+        base = self.base
+        rp = getattr(base, "region_plan", None)
+        if (rp is None or not base.config.use_pallas
+                or len(base.plan.inputs) != 1
+                or self._k_sharding is not None):
+            return False
+        units = rp.units()
+        return bool(units) and all(
+            kind == "region" and not u.broadcast_inputs
+            for kind, u in units)
+
+    def _make_serve_stacked(self):
+        """The resident-double-buffered serve: the region pipeline runs as
+        ``region_call_stacked`` over all K lanes — grid (lane, row tile),
+        lane k+1's resident weights DMA'd while lane k computes (see
+        ``kernels.region``).  Same [nb, K, block, ...] chunk contract as
+        the vmap path."""
+        from repro.kernels.region import region_call_stacked
+        base = self.base
+        g, plan = base.graph, base.plan
+        cfg = base.config
+        K = self.n_inrs
+        B = plan.batch
+        residents = self.residents
+        input_id = plan.inputs[0]
+        regions = [u for _, u in base.region_plan.units()]
+        streamed = self.streamed_outputs()
+
+        def stacked_row(nid):
+            # one [K, 1, C] row per row-const extra (cf. executor's
+            # per-lane [1, C] conversion)
+            a = residents[nid]                     # [K, ...per-lane]
+            if nid in plan.rowconst and a.ndim >= 2 and a.shape[1:2] == (B,):
+                a = a[:, :1]
+            if a.ndim >= 3:
+                return a[:, :1].reshape(K, 1, a.shape[-1])
+            if a.ndim == 2:
+                return a[:, None, :]
+            return a.reshape(K, 1, 1)
+
+        def serve(xb):                 # [n_blocks, K, block, ...features]
+            nb, _, block = xb.shape[:3]
+            rows = nb * block
+            env = {input_id: jnp.moveaxis(xb, 1, 0).reshape(
+                K, rows, *xb.shape[3:])}
+            for region in regions:
+                spec = region.spec
+                stream = [env[nid] for nid in region.stream_inputs]
+                row_args = [stacked_row(nid)
+                            for nid, _ in region.bcast_rows]
+                bias_ids = {s[4] for s in spec.steps
+                            if s[0] == "mm" and s[4] is not None}
+                res_args = []
+                for nid in region.resident_inputs:
+                    a = residents[nid]
+                    if nid in bias_ids and a.ndim == 3:
+                        a = a[:, 0]    # per-lane (1,N)/(B,N) bias -> (N,)
+                    res_args.append(a)
+                out_info = tuple((g.nodes[o].shape[-1], g.nodes[o].dtype)
+                                 for o in region.outputs)
+                outs = region_call_stacked(spec, stream, row_args, res_args,
+                                           out_info, bm=cfg.bm)
+                for nid, o in zip(region.outputs, outs):
+                    env[nid] = o       # [K, rows, C]
+            result = []
+            for o in streamed:
+                v = env[o]
+                v = jnp.moveaxis(
+                    v.reshape(K, nb, block, *v.shape[2:]), 0, 1)
+                result.append(v)
+            return tuple(result)
         return serve
 
     def apply_chunk(self, xb):
@@ -287,7 +383,9 @@ class MultiINRArtifact:
             n = math.prod(mesh.shape[a] for a in
                           (ax if isinstance(ax, tuple) else (ax,)))
             shard = f", K sharded {n}-way over {ax!r}"
+        dbuf = (", resident double-buffered (stacked region lanes)"
+                if self.double_buffered else "")
         return (f"MultiINRArtifact: {self.n_inrs} INRs x "
                 f"[{self.base.config.describe()}], "
-                f"{len(self.residents)} stacked residents{shard}, "
+                f"{len(self.residents)} stacked residents{shard}{dbuf}, "
                 f"signature {self.base.signature}")

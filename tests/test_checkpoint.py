@@ -76,8 +76,8 @@ p = {str(tmp_path / 'elastic')!r}
 C.save(state, p, step=2)
 
 for shape in [(2, 2), (4, 1)]:
-    mesh = jax.make_mesh(shape, ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.distributed.sharding import make_mesh
+    mesh = make_mesh(shape, ("data", "model"))
     policy = ShardingPolicy(mesh)
     sh = steplib._to_shardings(mesh, steplib.state_specs(cfg, policy))
     got, step = C.restore(state, p, shardings=sh)

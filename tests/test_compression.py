@@ -42,7 +42,8 @@ from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 from repro.distributed.compression import compressed_psum
 
-mesh = jax.make_mesh((4,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.distributed.sharding import make_mesh
+mesh = make_mesh((4,), ("data",))
 x = jax.random.normal(jax.random.PRNGKey(0), (4, 128))
 
 def f(xs):

@@ -57,7 +57,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.distributed.hlo_cost import analyze
 
 M = N = K = 128
-mesh = jax.make_mesh((8,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.distributed.sharding import make_mesh
+mesh = make_mesh((8,), ("x",))
 sh = NamedSharding(mesh, P(None, "x"))
 
 def scanned(a, b):

@@ -12,10 +12,9 @@ def test_policy_divisibility_fallback():
     code = """
 import jax
 from jax.sharding import PartitionSpec as P
-from repro.distributed.sharding import ShardingPolicy
+from repro.distributed.sharding import ShardingPolicy, make_mesh
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((2, 4), ("data", "model"))
 pol = ShardingPolicy(mesh)
 # divisible: shard
 assert pol.spec((16, 64), ("attn_fsdp", "q_dim")) == P("data", "model")
@@ -38,7 +37,7 @@ def test_sharded_train_step_matches_single_device():
 import jax, jax.numpy as jnp, numpy as np
 from repro.configs import get_config
 from repro.configs.base import ShapeConfig
-from repro.distributed.sharding import ShardingPolicy
+from repro.distributed.sharding import ShardingPolicy, make_mesh
 from repro.launch import steps as steplib
 from repro.models import zoo
 
@@ -56,8 +55,7 @@ step1 = jax.jit(steplib.build_train_step(cfg, hp))
 _, m1 = step1(jax.tree.map(jnp.copy, state), batch)
 
 # 2x2 mesh with policy shardings
-mesh = jax.make_mesh((2, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((2, 2), ("data", "model"))
 pol = ShardingPolicy(mesh)
 sh = steplib._to_shardings(mesh, steplib.state_specs(cfg, pol))
 bsh = steplib._to_shardings(mesh, steplib.batch_specs(cfg, shape, pol))
@@ -79,12 +77,11 @@ def test_cache_specs_cover_tree():
     code = """
 import jax
 from repro.configs import get_config
-from repro.distributed.sharding import ShardingPolicy
+from repro.distributed.sharding import ShardingPolicy, make_mesh
 from repro.launch import steps as steplib
 from repro.models import zoo
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((2, 4), ("data", "model"))
 pol = ShardingPolicy(mesh)
 for arch in ("qwen3-8b", "mamba2-2.7b", "jamba-v0.1-52b", "llama-3.2-vision-90b"):
     cfg = get_config(arch)
