@@ -2,7 +2,7 @@
 
 PY ?= python
 
-.PHONY: test test-fast serve-smoke async-smoke bench bench-segments bench-regions bench-regions-check bench-pipeline bench-autotune bench-serve bench-json
+.PHONY: test test-fast serve-smoke async-smoke bench bench-segments bench-regions bench-regions-check bench-bank bench-bank-check bench-pipeline bench-autotune bench-serve bench-json
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -27,6 +27,12 @@ bench-regions:
 
 bench-regions-check:
 	PYTHONPATH=src $(PY) -m benchmarks.run regions --check
+
+bench-bank:
+	PYTHONPATH=src $(PY) -m benchmarks.run bank
+
+bench-bank-check:
+	PYTHONPATH=src $(PY) -m benchmarks.run bank --check
 
 bench-pipeline:
 	PYTHONPATH=src $(PY) -m benchmarks.run pipeline

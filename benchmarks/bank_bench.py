@@ -1,0 +1,146 @@
+"""Filter-bank compiler: dispatches, HBM traffic, parity, wall time.
+
+The tentpole claim of the bank compiler (DESIGN.md §9) is that F filters
+over one INR serve from ONE merged multi-output artifact at a fraction of
+the per-filter cost: the shared gradient prefix is computed once per row
+tile instead of F times.  This benchmark measures a 4-filter INSP bank at
+order 2 against the per-filter loop (each filter compiled standalone):
+
+  * KERNEL DISPATCHES per block step — the merged region schedule vs the
+    sum of the per-filter schedules;
+  * PER-BLOCK HBM BYTES — the analytic traffic model from ``core/regions``
+    on the merged plan vs summed over per-filter plans;
+  * PARITY — max |bank output - per-filter output| over a
+    non-block-multiple batch, required to be exactly 0.0 (bit-exact);
+  * END-TO-END WALL TIME of one bank pass vs F per-filter passes.
+
+With ``--json --check`` (``benchmarks/run.py``), the dispatch counts,
+predicted HBM bytes, and parity are gated against
+``results/bank_baseline.json``; the check additionally enforces the
+acceptance ratios — the loop must cost >= 2x the bank in both dispatches
+and modeled HBM bytes — so a fusion regression that halves the win fails
+CI even if the absolute counts move below baseline.
+"""
+
+import numpy as np
+
+from repro.core import pipeline as P
+from repro.core.config import HardwareConfig
+from repro.core.regions import region_hbm_bytes_per_block
+
+from benchmarks.common import emit, time_fn
+
+# gated metrics (see check()): compiler-deterministic plus exact parity.
+GATED_SUFFIXES = ("dispatches_bank", "hbm_block_bank", "parity_maxabs")
+N_FILTERS = 4
+ORDER = 2
+
+
+def run(hidden: int = 64, layers: int = 2, n_filters: int = N_FILTERS,
+        order: int = ORDER):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.siren import InspConfig, SirenConfig
+    from repro.inr.gradnet import num_features
+    from repro.inr.insp import insp_head, insp_init
+    from repro.inr.siren import siren_fn, siren_init
+
+    cfg = SirenConfig(hidden_features=hidden, hidden_layers=layers)
+    params = siren_init(cfg, jax.random.PRNGKey(0))
+    f = siren_fn(cfg, params)
+    icfg = InspConfig(hidden=16, layers=2, grad_order=order)
+    nf = num_features(cfg.in_features, cfg.out_features, order)
+    heads = [insp_head(insp_init(icfg, nf, 1, jax.random.PRNGKey(i + 1)))
+             for i in range(n_filters)]
+    x = jax.random.uniform(jax.random.PRNGKey(9),
+                           (cfg.batch, cfg.in_features), jnp.float32, -1, 1)
+
+    hw = HardwareConfig(block=8, use_pallas=True, fuse_regions=True)
+    bank = P.compile_bank(f, heads, order, x, config=hw)
+    solos = [P.compile_bank(f, [h], order, x, config=hw) for h in heads]
+    block = bank.config.block
+
+    d_bank = len(bank.dispatch)
+    d_loop = sum(len(s.dispatch) for s in solos)
+    emit(f"bank/dispatches_bank", d_bank,
+         f"{n_filters} filters, one merged schedule; "
+         f"loop={d_loop} ({d_loop / max(d_bank, 1):.1f}x)",
+         dispatches=d_bank, n_filters=n_filters, order=order)
+    emit(f"bank/dispatches_loop", d_loop, "sum of per-filter schedules",
+         dispatches=d_loop)
+
+    hbm_bank = region_hbm_bytes_per_block(bank.plan, bank.region_plan, block)
+    hbm_loop = sum(region_hbm_bytes_per_block(s.plan, s.region_plan, block)
+                   for s in solos)
+    emit(f"bank/hbm_block_bank", hbm_bank,
+         f"bytes/block, merged region IO; "
+         f"loop={hbm_loop} ({hbm_loop / max(hbm_bank, 1):.1f}x)",
+         hbm_bytes=hbm_bank)
+    emit(f"bank/hbm_block_loop", hbm_loop,
+         "bytes/block summed over per-filter plans", hbm_bytes=hbm_loop)
+
+    n_bank = len(bank.graph.topo_order())
+    n_loop = sum(len(s.graph.topo_order()) for s in solos)
+    emit(f"bank/nodes_bank", n_bank,
+         f"merged graph after CSE; loop={n_loop} "
+         f"({n_loop / max(n_bank, 1):.1f}x)", nodes=n_bank)
+
+    # bit-exact parity on a non-block-multiple batch
+    xs = jax.random.uniform(jax.random.PRNGKey(10),
+                            (101, cfg.in_features), jnp.float32, -1, 1)
+    outs = bank.apply_batched(xs)
+    maxabs = 0.0
+    for j, s in enumerate(solos):
+        (ref,) = s.apply_batched(xs)
+        maxabs = max(maxabs, float(np.max(np.abs(
+            np.asarray(outs[j]) - np.asarray(ref)))))
+    emit(f"bank/parity_maxabs", maxabs,
+         f"max |bank - per-filter| over {xs.shape[0]} rows; must be 0",
+         n_rows=int(xs.shape[0]))
+
+    us_bank = time_fn(bank.apply_batched, xs)
+
+    def loop_pass(q):
+        return [s.apply_batched(q) for s in solos]
+    us_loop = time_fn(loop_pass, xs)
+    emit(f"bank/wall_bank", us_bank,
+         f"one merged pass, {jax.default_backend()}; "
+         f"vs_loop={us_loop / max(us_bank, 1e-9):.2f}x",
+         config=bank.config.as_dict())
+    emit(f"bank/wall_loop", us_loop, f"{n_filters} per-filter passes")
+
+
+def check(current: list[dict], baseline: dict) -> list[str]:
+    """Regression gate for ``--check``: bank dispatch counts / HBM bytes
+    must not exceed the committed baseline, parity must stay exactly 0,
+    and the per-filter loop must cost >= 2x the bank in both dispatches
+    and modeled HBM bytes (the acceptance ratios).  Returns failure
+    strings (empty = pass)."""
+    cur = {r["name"]: r for r in current}
+    base = {r["name"]: r for r in baseline.get("results", [])}
+    failures = []
+    for rec in current:
+        if not any(rec["name"].endswith(s) for s in GATED_SUFFIXES):
+            continue
+        b = base.get(rec["name"])
+        if b is None:
+            continue                       # new metric: nothing to gate
+        if rec["us_per_call"] > b["us_per_call"]:
+            failures.append(
+                f"{rec['name']}: {rec['us_per_call']:.0f} regressed vs "
+                f"baseline {b['us_per_call']:.0f}")
+    parity = cur.get("bank/parity_maxabs")
+    if parity is not None and parity["us_per_call"] != 0.0:
+        failures.append(f"bank/parity_maxabs: {parity['us_per_call']} != 0 "
+                        f"(bank output not bit-exact vs per-filter)")
+    for metric in ("dispatches", "hbm_block"):
+        b_rec = cur.get(f"bank/{metric}_bank")
+        l_rec = cur.get(f"bank/{metric}_loop")
+        if b_rec is None or l_rec is None:
+            continue
+        if l_rec["us_per_call"] < 2 * b_rec["us_per_call"]:
+            failures.append(
+                f"bank/{metric}: loop {l_rec['us_per_call']:.0f} < 2x bank "
+                f"{b_rec['us_per_call']:.0f} (acceptance ratio lost)")
+    return failures

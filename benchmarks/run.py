@@ -21,10 +21,11 @@ import pathlib
 import sys
 import time
 
-from benchmarks import (autotune_bench, common, higher_order, kernels_bench,
-                        pipeline_bench, regions_bench, roofline,
-                        segments_bench, serve_bench, table1_latency,
-                        table2_parallelism, table3_graphopt, table4_fifo)
+from benchmarks import (autotune_bench, bank_bench, common, higher_order,
+                        kernels_bench, pipeline_bench, regions_bench,
+                        roofline, segments_bench, serve_bench,
+                        table1_latency, table2_parallelism, table3_graphopt,
+                        table4_fifo)
 
 ALL = {
     "table1": table1_latency.run,
@@ -35,6 +36,7 @@ ALL = {
     "kernels": kernels_bench.run,
     "segments": segments_bench.run,
     "regions": regions_bench.run,
+    "bank": bank_bench.run,
     "pipeline": pipeline_bench.run,
     "autotune": autotune_bench.run,
     "serve": serve_bench.run,
@@ -45,6 +47,7 @@ DEFAULT = [n for n in ALL if n != "higher_order"]
 # regression gates: benchmark name -> check(current_records, baseline) hook
 CHECKS = {
     "regions": regions_bench.check,
+    "bank": bank_bench.check,
 }
 
 RESULTS_DIR = pathlib.Path(__file__).resolve().parent.parent / "results"

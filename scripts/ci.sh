@@ -8,6 +8,9 @@
 # (submit/drain bit-identical to sync across rounds); the regions check
 # gates the fused-region scheduler (dispatch count and predicted per-block
 # HBM bytes must not regress vs the committed results/regions_baseline.json);
+# the bank check gates the filter-bank compiler (bit-exact parity vs
+# per-filter baselines, and the loop must cost >= 2x the bank in both
+# dispatches and modeled HBM bytes, vs results/bank_baseline.json);
 # then a fast gate without the slow training tests; then the full suite
 # (including @pytest.mark.slow).
 set -euo pipefail
@@ -16,5 +19,6 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m repro.core.autoconfig
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python scripts/serve_smoke.py
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python scripts/async_serve_smoke.py
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.run regions --check
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.run bank --check
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q -m "not slow" "$@"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

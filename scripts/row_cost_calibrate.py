@@ -12,7 +12,13 @@ the kernels target, or the CPU interpret path in dev):
   * the MM is timed as ``[rows, K] @ [K, N]``; its calibration is the
     continuous scale ``mm_row_cost_per_k`` (measured per-row-per-K time
     over the Add unit), which ``dataflow.segment_row_cost`` multiplies into
-    ``ceil(K * scale / parallelism)``.
+    ``ceil(K * scale / parallelism)``;
+  * the host -> shard interconnect hop is timed as a ``device_put`` of a
+    host-resident block; its per-row time over the Add unit becomes
+    ``xshard_row_cost``, which ``dataflow.map_to_dataflow`` charges on the
+    xshard forwarder edge of every pipeline input under a sharded mesh
+    (``config.n_shards > 1``) in place of the static
+    ``config.xshard_row_cost`` default.
 
 Output is JSON under ``results/`` (default ``results/op_row_cost.json``),
 loadable with ``dataflow.load_op_row_cost()`` — explicit opt-in, never
@@ -81,12 +87,21 @@ def calibrate(rows: int = 4096, cols: int = 256, k: int = 256,
     mm_s = _median_time(mm, xa, warmup=warmup, iters=iters)
     mm_row_cost_per_k = max(1e-6, (mm_s / rows / k) / unit)
 
+    # host -> device hop: a device_put of a host-resident block (the
+    # interconnect transfer a sharded mesh pays per input block)
+    import numpy as np
+    host_block = np.asarray(x)
+    put = lambda a: jax.device_put(a)
+    xshard_s = _median_time(put, host_block, warmup=warmup, iters=iters)
+    xshard_row_cost = max(1, round((xshard_s / rows) / unit))
+
     return {
         "meta": {"backend": jax.default_backend(), "rows": rows,
                  "cols": cols, "k": k, "iters": iters,
                  "unit_s_per_row": unit},
         "op_row_cost": table,
         "mm_row_cost_per_k": mm_row_cost_per_k,
+        "xshard_row_cost": xshard_row_cost,
     }
 
 
@@ -112,7 +127,8 @@ def main(argv=None) -> int:
     costs = " ".join(f"{k_}={v}" for k_, v in
                      sorted(result["op_row_cost"].items()))
     print(f"row costs [{result['meta']['backend']}]: {costs} "
-          f"mm_per_k={result['mm_row_cost_per_k']:.3g} -> {args.out} "
+          f"mm_per_k={result['mm_row_cost_per_k']:.3g} "
+          f"xshard={result['xshard_row_cost']} -> {args.out} "
           f"({len(loaded)} ops active after load)")
     return 0
 

@@ -36,7 +36,8 @@ Under a SHARDED serving mesh (``config.n_shards > 1``, DESIGN.md §8) the
 host -> shard interconnect hop is modeled as one more FIFO edge per
 pipeline input: the Input source writes a HOST-side stream, and an
 ``xshard`` process forwards each block onto the device-side stream at the
-calibrated per-row cost ``config.xshard_row_cost``.  The deadlock analysis
+calibrated per-row cost — the measured ``XSHARD_ROW_COST`` when
+``load_op_row_cost`` has installed one, else ``config.xshard_row_cost``.  The deadlock analysis
 and the latency oracle both see that edge, so ``config="auto"`` stays
 honest about the cross-shard stream instead of pretending queries
 materialize on-device for free.
@@ -79,6 +80,12 @@ _ANALYTIC_OP_ROW_COST = dict(OP_ROW_COST)
 # relative to an elementwise add.
 MM_ROW_COST_PER_K = 1.0
 
+# calibrated host -> shard interconnect hop (row-cycles per row).  None =
+# use ``config.xshard_row_cost`` (the static default); calibration measures
+# a real device_put per row over the Add unit and swaps the measured value
+# in for every config.
+XSHARD_ROW_COST: int | None = None
+
 
 def op_row_cost(op: str) -> int:
     return OP_ROW_COST.get(op, 1)
@@ -92,7 +99,7 @@ def load_op_row_cost(path=None) -> dict:
     active table; ``reset_op_row_cost`` restores the analytic one."""
     import json
     import pathlib
-    global MM_ROW_COST_PER_K
+    global MM_ROW_COST_PER_K, XSHARD_ROW_COST
     if path is None:
         path = (pathlib.Path(__file__).resolve().parents[3]
                 / "results" / "op_row_cost.json")
@@ -101,15 +108,18 @@ def load_op_row_cost(path=None) -> dict:
                         for k, v in d.get("op_row_cost", {}).items()})
     if d.get("mm_row_cost_per_k") is not None:
         MM_ROW_COST_PER_K = max(1e-6, float(d["mm_row_cost_per_k"]))
+    if d.get("xshard_row_cost") is not None:
+        XSHARD_ROW_COST = max(1, int(round(float(d["xshard_row_cost"]))))
     return dict(OP_ROW_COST)
 
 
 def reset_op_row_cost():
-    """Restore the analytic OP_ROW_COST / MM defaults."""
-    global MM_ROW_COST_PER_K
+    """Restore the analytic OP_ROW_COST / MM / xshard defaults."""
+    global MM_ROW_COST_PER_K, XSHARD_ROW_COST
     OP_ROW_COST.clear()
     OP_ROW_COST.update(_ANALYTIC_OP_ROW_COST)
     MM_ROW_COST_PER_K = 1.0
+    XSHARD_ROW_COST = None
 
 
 def segment_row_cost(plan: SegmentPlan, seg, mm_parallel: int) -> int:
@@ -310,7 +320,9 @@ def map_to_dataflow(g: ComputeGraph, *, block: int | None = None,
         if n_shards > 1:
             s_host = new_stream(node)          # host side of the interconnect
             xp = Process(f"xshard{nid}")
-            hop = block * max(1, config.xshard_row_cost)
+            hop_rows = (XSHARD_ROW_COST if XSHARD_ROW_COST is not None
+                        else config.xshard_row_cost)
+            hop = block * max(1, hop_rows)
             for i in range(nb_in):
                 p.steps.append(Step(writes=((s_host, i),), delay=block))
                 xp.steps.append(Step(reads=((s_host, i),),

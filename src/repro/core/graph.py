@@ -150,3 +150,34 @@ class ComputeGraph:
             for i in n.inputs:
                 assert pos[i] < pos[n.id], f"cycle through {i}->{n.id}"
         return True
+
+
+def merge_graphs(graphs: Iterable["ComputeGraph"]):
+    """Graft several graphs into ONE multi-output graph (the filter-bank
+    merge, DESIGN.md §9).
+
+    Each input graph's live nodes are copied with fresh ids and its outputs
+    appended to the merged ``outputs`` list — nothing is shared yet; the
+    result is the disjoint union.  Running ``passes.dedupe_common_subtrees``
+    on the merged graph is what collapses the shared structure: Input nodes
+    with identical (params, shape, dtype) and Consts with identical content
+    hash to the same key, so a feature prefix common to every filter
+    CSE-merges into a single computation feeding every head.
+
+    Returns ``(merged, slices)`` where ``slices[j] = (start, stop)`` is the
+    half-open range of ``merged.outputs`` owned by input graph ``j`` —
+    stable across the optimization passes, which rewrite output IDS but
+    never reorder or drop output POSITIONS."""
+    merged = ComputeGraph()
+    slices: list[tuple[int, int]] = []
+    for g in graphs:
+        remap: dict[int, int] = {}
+        for nid in g.topo_order():          # live nodes only, topo order
+            n = g.nodes[nid]
+            remap[nid] = merged.add(n.op, n.shape, n.dtype,
+                                    tuple(remap[i] for i in n.inputs),
+                                    n.params, n.const)
+        start = len(merged.outputs)
+        merged.outputs.extend(remap[o] for o in g.outputs)
+        slices.append((start, len(merged.outputs)))
+    return merged, slices

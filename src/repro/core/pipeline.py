@@ -37,6 +37,8 @@ requires.  Distinct configs are distinct artifacts.
 
 from __future__ import annotations
 
+from dataclasses import dataclass
+
 import jax
 import jax.numpy as jnp
 
@@ -445,6 +447,7 @@ def clear_compile_cache() -> None:
     the tracer counter is monotonic by design (tests measure deltas)."""
     from repro.core import executor
     _CACHE.clear()
+    _BANK_CACHE.clear()
     for k in _STATS:
         _STATS[k] = 0
     executor._GRAPH_CACHE.clear()
@@ -650,3 +653,280 @@ def _compile_auto(fn, order: int, shape, dtype, *,
         cg._stored_in.add(store.root)
         _STATS["store_puts"] += 1
     return cg
+
+
+# ---------------------------------------------------------------------------
+# the filter-bank compiler (DESIGN.md §9): F filters, one megakernel pipeline
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class BankReport:
+    """Compile-time accounting of the bank vs the per-filter loop it
+    replaces — every field is a deterministic compiler output (no timing).
+
+    The "loop" numbers are the SUM over per-filter artifacts at the same
+    HardwareConfig: F separate compiles, each re-deriving the shared
+    gradient-feature prefix.  The bank merges the filter graphs, hash-conses
+    the prefix to one computation, and serves every filter output from one
+    multi-sink region pipeline — so each bank column is never worse, and the
+    prefix sharing makes dispatches/HBM strictly better for F >= 2."""
+    n_heads: int
+    nodes_bank: int
+    nodes_loop: int
+    dispatches_bank: int
+    dispatches_loop: int
+    hbm_block_bank: int
+    hbm_block_loop: int
+    row_cycles_bank: int
+    row_cycles_loop: int
+
+    def describe(self) -> str:
+        def x(a, b):
+            return f"{b / max(a, 1):.1f}x"
+        return (f"BankReport({self.n_heads} heads): "
+                f"nodes {self.nodes_bank} vs loop {self.nodes_loop} "
+                f"({x(self.nodes_bank, self.nodes_loop)}), "
+                f"dispatches {self.dispatches_bank} vs "
+                f"{self.dispatches_loop} "
+                f"({x(self.dispatches_bank, self.dispatches_loop)}), "
+                f"hbm/block {self.hbm_block_bank} vs {self.hbm_block_loop} "
+                f"({x(self.hbm_block_bank, self.hbm_block_loop)}), "
+                f"row-cycles {self.row_cycles_bank} vs "
+                f"{self.row_cycles_loop}")
+
+
+class CompiledBank:
+    """F filter pipelines compiled as ONE multi-output artifact.
+
+    Wraps the ``CompiledGradient`` of the MERGED graph (every standard
+    artifact capability — serving paths, store persistence, dataflow
+    summaries — comes from it unchanged) plus the bank bookkeeping: head
+    count/order and the compile-time ``BankReport`` (None when restored
+    from a store, where the per-filter graphs were never re-traced).
+    Output ``j`` of every serving call is filter ``j``'s output, in the
+    order the heads were given."""
+
+    def __init__(self, cg: CompiledGradient, *, n_heads: int, order: int,
+                 report: BankReport | None = None, fn=None, heads=None):
+        self.cg = cg
+        self.n_heads = n_heads
+        self.order = order
+        self.report = report
+        self.fn = fn
+        self.heads = tuple(heads) if heads is not None else None
+
+    @property
+    def graph(self) -> ComputeGraph:
+        return self.cg.graph
+
+    @property
+    def plan(self) -> SegmentPlan:
+        return self.cg.plan
+
+    @property
+    def config(self) -> HardwareConfig:
+        return self.cg.config
+
+    @property
+    def region_plan(self):
+        return self.cg.region_plan
+
+    @property
+    def dispatch(self):
+        return self.cg.dispatch
+
+    @property
+    def signature(self) -> str:
+        return self.cg.signature
+
+    def apply(self, coords):
+        return self.cg.apply(coords)
+
+    def apply_batched(self, coords):
+        """Serve any N rows; returns a tuple of F arrays, one per filter."""
+        return self.cg.apply_batched(coords)
+
+    def describe(self) -> str:
+        lines = [f"CompiledBank({self.n_heads} heads, order={self.order})"]
+        if self.report is not None:
+            lines.append("  " + self.report.describe())
+        lines.append(self.cg.describe())
+        return "\n".join(lines)
+
+
+_BANK_CACHE: dict[tuple, CompiledBank] = {}
+
+
+def _trace_filter_graph(fn, head, order: int, trace_b: int, shape,
+                        dtype) -> ComputeGraph:
+    """Extract + optimize the graph of ONE filter: ``head`` applied to the
+    order-th gradient feature matrix of ``fn`` (the INSP computation,
+    DESIGN.md §9).  Column layout matches ``gradnet.feature_vector``."""
+    from repro.core.passes import optimize
+    from repro.core.trace import extract_graph
+    from repro.inr.gradnet import paper_gradients
+
+    abstract = jax.ShapeDtypeStruct((trace_b,) + tuple(shape[1:]), dtype)
+    out = jax.eval_shape(fn, abstract)
+    gfn = paper_gradients(fn, order, out_features=out.shape[-1],
+                          in_features=shape[-1])
+
+    def filter_fn(x):
+        outs = gfn(x)
+        feats = jnp.concatenate([o.reshape(o.shape[0], -1) for o in outs],
+                                -1)
+        return head(feats)
+
+    g = extract_graph(filter_fn, abstract)
+    optimize(g)
+    return g
+
+
+def _bank_report(per_head, merged: ComputeGraph,
+                 cg: CompiledGradient) -> BankReport:
+    """Deterministic bank-vs-loop accounting at the bank's resolved config.
+    The loop columns sum per-filter plans compiled at the SAME config, so
+    the comparison isolates graph sharing from hardware-parameter choice."""
+    from repro.core.autoconfig import predicted_latency
+    from repro.core.regions import (build_region_plan, region_dispatch_table,
+                                    region_hbm_bytes_per_block)
+    cfg = cg.config
+    d_loop = h_loop = c_loop = n_loop = 0
+    for g in per_head:
+        plan = build_segment_plan(g, config=cfg)
+        rp = build_region_plan(plan, cfg)
+        d_loop += len(region_dispatch_table(plan, rp))
+        h_loop += region_hbm_bytes_per_block(plan, rp, cfg.block)
+        c_loop += predicted_latency(g, cfg, plan=plan)
+        n_loop += len(g.nodes)
+    rp_bank = cg.region_plan
+    if rp_bank is None:
+        rp_bank = build_region_plan(cg.plan, cfg)
+    return BankReport(
+        n_heads=len(per_head),
+        nodes_bank=len(merged.nodes), nodes_loop=n_loop,
+        dispatches_bank=len(region_dispatch_table(cg.plan, rp_bank)),
+        dispatches_loop=d_loop,
+        hbm_block_bank=region_hbm_bytes_per_block(cg.plan, rp_bank,
+                                                  cfg.block),
+        hbm_block_loop=h_loop,
+        row_cycles_bank=predicted_latency(merged, cfg, plan=cg.plan),
+        row_cycles_loop=c_loop)
+
+
+def compile_bank(fn, heads, order: int, example_coords, *,
+                 config: HardwareConfig | str | None = None,
+                 block: int | None = None,
+                 use_pallas: bool | None = None,
+                 store=None,
+                 base_config: HardwareConfig | None = None) -> CompiledBank:
+    """Compile a FILTER BANK: every ``head`` applied to the same order-th
+    gradient features of INR ``fn``, served from ONE merged pipeline.
+
+    Each filter's graph is traced independently (head over the
+    ``gradnet.feature_vector`` feature matrix), grafted into one
+    multi-output graph (``graph.merge_graphs``), and hash-consed
+    (``passes.dedupe_common_subtrees``) so the shared gradient-feature
+    prefix — ~90% of every filter's FLOPs — collapses to a single
+    computation feeding every head.  The merged graph compiles through the
+    standard ``compile_from_graph`` stack: the region scheduler fuses the
+    prefix and the head branches into multi-sink megakernels, so one
+    streamed pass emits all F filter outputs per row tile.
+
+    ``config`` follows ``compile_gradient``: a ``HardwareConfig``, ``None``
+    (defaults), or ``"auto"`` (the dataflow oracle searches over the MERGED
+    graph; ``base_config`` seeds it).  Each head must trace to exactly one
+    output array.  Repeat calls with the same (fn, heads, order, coords,
+    config) identities hit the in-process bank cache; ``store`` adds the
+    disk level under the merged graph's architecture signature, with the
+    request bound via ``serve.store.bank_request_key``.
+
+    Returns a ``CompiledBank``; ``apply_batched(coords)`` yields a tuple of
+    F arrays in head order, bit-identical to serving each filter through
+    its own single-head artifact."""
+    heads = tuple(heads)
+    if not heads:
+        raise ValueError("compile_bank needs at least one head")
+    shape = tuple(example_coords.shape)
+    dtype = str(jnp.dtype(example_coords.dtype))
+    if store is not None:
+        from repro.serve.store import as_store
+        store = as_store(store)
+
+    auto = isinstance(config, str)
+    if auto and config != "auto":
+        raise ValueError(f"config must be a HardwareConfig, None, or "
+                         f"'auto'; got {config!r}")
+    head_keys = tuple(_fn_key(h) for h in heads)
+    if auto:
+        base = as_hardware_config(base_config, block=block,
+                                  use_pallas=use_pallas).resolved()
+        trace_b = shape[0] + (-shape[0]) % 8
+        key = (_fn_key(fn), head_keys, int(order),
+               (trace_b,) + shape[1:], dtype, "auto", base)
+        key_cfg = base
+    else:
+        if base_config is not None:
+            raise ValueError("base_config only seeds config='auto'; pass it "
+                             "as config= for an explicit request")
+        cfg = as_hardware_config(config, block=block,
+                                 use_pallas=use_pallas).resolved()
+        trace_b = shape[0] + (-shape[0]) % cfg.block
+        key = (_fn_key(fn), head_keys, int(order),
+               (trace_b,) + shape[1:], dtype, cfg.clamped(trace_b))
+        key_cfg = cfg.clamped(trace_b)
+    hit = _BANK_CACHE.get(key)
+    if hit is not None:
+        _STATS["hits"] += 1
+        hit.cg.cache_hits += 1
+        return hit
+    _STATS["misses"] += 1
+
+    rk = None
+    if store is not None:
+        from repro.serve.store import bank_request_key
+        rk = bank_request_key(fn, heads, order,
+                              (trace_b,) + tuple(shape[1:]), dtype, key_cfg,
+                              mode="auto" if auto else "explicit")
+        if rk is not None:
+            cg = store.restore_request(rk)
+            if cg is not None:
+                _STATS["store_hits"] += 1
+                bank = CompiledBank(cg, n_heads=len(heads), order=order,
+                                    fn=fn, heads=heads)
+                _BANK_CACHE[key] = bank
+                return bank
+            _STATS["store_misses"] += 1
+
+    per_head = [_trace_filter_graph(fn, h, order, trace_b, shape, dtype)
+                for h in heads]
+    for j, gh in enumerate(per_head):
+        if len(gh.outputs) != 1:
+            raise ValueError(
+                f"bank head {j} traced to {len(gh.outputs)} outputs; each "
+                f"filter head must return exactly one array")
+    from repro.core.graph import merge_graphs
+    from repro.core.passes import optimize
+    merged, _ = merge_graphs(per_head)
+    optimize(merged)        # dedupe_common_subtrees collapses the prefix
+
+    autoconfig = None
+    if auto:
+        from repro.core.autoconfig import resolve_config
+        plan = build_segment_plan(merged)
+        autoconfig = resolve_config(merged, plan, base=base)
+        cfg = autoconfig.config
+        cg = compile_from_graph(merged, config=cfg, plan=plan, order=order,
+                                autoconfig=autoconfig)
+    else:
+        cg = compile_from_graph(merged, config=cfg, order=order)
+
+    bank = CompiledBank(cg, n_heads=len(heads), order=order,
+                        report=_bank_report(per_head, merged, cg),
+                        fn=fn, heads=heads)
+    _BANK_CACHE[key] = bank
+    if store is not None:
+        store.put(cg, request_key=rk)
+        cg._stored_in.add(store.root)
+        _STATS["store_puts"] += 1
+    return bank

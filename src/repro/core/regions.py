@@ -62,11 +62,12 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from repro.core.config import HardwareConfig
-from repro.core.segment import (FUSED_MM_ACT, MATMUL, STREAM_CHAIN,
-                                Segment, SegmentPlan, segment_dispatch)
+from repro.core.segment import (BUFFERING, FUSED_MM_ACT, MATMUL, STREAM_CHAIN,
+                                Segment, SegmentPlan, _p, segment_dispatch)
 
 CHAIN = "chain"
 MM = "mm"
+CONCAT = "concat"
 
 FUSED_REGION = "FusedRegion"
 REGION_KERNEL = "region"
@@ -92,6 +93,16 @@ def _lower_segment(plan: SegmentPlan, seg: Segment):
         mm = g.nodes[seg.meta["mm"]]
         return (MM, seg.output, mm.inputs[0], mm.inputs[1],
                 seg.meta["bias"], seg.meta["w0"], seg.meta["apply_sin"])
+    if seg.kind == BUFFERING and len(seg.nodes) == 1:
+        # a last-axis Concat of streamed 2-D tensors is row-wise — it
+        # streams like an elementwise step (the filter bank's feature
+        # assembly), so it need not cut the region
+        n = g.nodes[seg.nodes[0]]
+        if (n.op == "Concat" and len(n.shape) == 2
+                and _p(n, "dimension") in (1, -1)
+                and all(i not in plan.resident
+                        and len(g.nodes[i].shape) == 2 for i in n.inputs)):
+            return (CONCAT, seg.output, tuple(n.inputs))
     return None
 
 
@@ -296,6 +307,10 @@ def _region_io(plan: SegmentPlan, members, consumers=None):
                         bcast[e] = cols
                 else:
                     want_stream(e)
+        elif step[0] == CONCAT:
+            _, out, xs = step
+            for i in xs:
+                want_stream(i)
         else:
             _, out, x, w, bias, _, _ = step
             want_stream(x)
@@ -319,6 +334,8 @@ def _step_operands(step):
     """Streamed-value operands of one step (resident w/bias excluded)."""
     if step[0] == CHAIN:
         return (step[2],) + tuple(step[4])
+    if step[0] == CONCAT:
+        return tuple(step[2])
     return (step[2],)
 
 
@@ -355,6 +372,8 @@ def plan_col_tiles(plan: SegmentPlan, io, config: HardwareConfig) -> tuple:
             out = step[1]
             if members and step[0] == MM and step[2] in members:
                 break                          # reducer candidate
+            if step[0] == CONCAT:
+                break                          # operand widths differ: untilable
             if _node_width(g, out) != W or out in out_set:
                 break
             ok = True

@@ -4,6 +4,12 @@ Train an INSP-Net head so that INSP(features of INR) matches a pixel-space
 transformation of the underlying image (here: Gaussian blur or sharpening —
 both are differential-operator-like, which is exactly why gradient features
 suffice, per Xu et al. [12]).
+
+Several edits of one INR are a FILTER BANK: ``train_insp_heads`` fits every
+head against one shared feature matrix, and ``edited_bank`` compiles the
+trained heads into a single multi-output artifact
+(``core.pipeline.compile_bank``, DESIGN.md §9) whose shared gradient prefix
+streams once per row tile regardless of how many edits it feeds.
 """
 
 from __future__ import annotations
@@ -16,7 +22,7 @@ from repro.configs.siren import InspConfig, SirenConfig
 from repro.inr.encode import image_coords
 from repro.inr.gradnet import (compiled_feature_vector, feature_vector,
                                num_features)
-from repro.inr.insp import insp_apply, insp_init
+from repro.inr.insp import insp_apply, insp_head, insp_init
 from repro.inr.siren import siren_fn
 
 
@@ -52,8 +58,48 @@ def train_insp_head(siren_cfg: SirenConfig, insp_cfg: InspConfig,
     key = key if key is not None else jax.random.PRNGKey(0)
     res = target_img.shape[0]
     coords = image_coords(res)
-    target = target_img.reshape(-1, 1)
+    feats, _ = _cached_features(siren_cfg, insp_cfg, siren_params, coords,
+                                config=config, block=block,
+                                compiled=compiled, store=store)
+    return _fit_head(siren_cfg, insp_cfg, feats, target_img.reshape(-1, 1),
+                     steps=steps, lr=lr, batch=batch, key=key)
 
+
+def train_insp_heads(siren_cfg: SirenConfig, insp_cfg: InspConfig,
+                     siren_params, targets, *, steps: int = 300,
+                     lr: float = 1e-3, batch: int = 512, key=None,
+                     config=None, block: int | None = None, compiled=None,
+                     store=None):
+    """Fit one INSP head per named target image over ONE shared feature
+    matrix — the filter-bank training front door.  ``targets`` maps name ->
+    target image (all at one resolution); the gradient features stream once
+    and every head trains against the same cached matrix.  Returns
+    ``{name: (psi, mse)}`` — hand the psis to ``edited_bank`` to compile
+    them into a single multi-output serving artifact."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    targets = dict(targets)
+    if not targets:
+        raise ValueError("train_insp_heads needs at least one target")
+    resolutions = {img.shape[0] for img in targets.values()}
+    if len(resolutions) != 1:
+        raise ValueError(f"targets span several resolutions: {resolutions}")
+    coords = image_coords(resolutions.pop())
+    feats, _ = _cached_features(siren_cfg, insp_cfg, siren_params, coords,
+                                config=config, block=block,
+                                compiled=compiled, store=store)
+    out = {}
+    for k, (name, img) in zip(jax.random.split(key, len(targets)),
+                              sorted(targets.items())):
+        out[name] = _fit_head(siren_cfg, insp_cfg, feats,
+                              img.reshape(-1, 1), steps=steps, lr=lr,
+                              batch=batch, key=k)
+    return out
+
+
+def _cached_features(siren_cfg, insp_cfg, siren_params, coords, *,
+                     config, block, compiled, store):
+    """The full-grid feature matrix, streamed once through the compiled
+    gradient pipeline (compile-or-restore via ``store``)."""
     f = siren_fn(siren_cfg, siren_params)
     if compiled is None:
         feats_fn, compiled = compiled_feature_vector(
@@ -61,7 +107,10 @@ def train_insp_head(siren_cfg: SirenConfig, insp_cfg: InspConfig,
             store=store)
     else:
         feats_fn = feature_vector(f, insp_cfg.grad_order, compiled=compiled)
-    feats = feats_fn(coords)                 # one streamed pass, all pixels
+    return feats_fn(coords), compiled
+
+
+def _fit_head(siren_cfg, insp_cfg, feats, target, *, steps, lr, batch, key):
     nf = num_features(siren_cfg.in_features, siren_cfg.out_features,
                       insp_cfg.grad_order)
     psi = insp_init(insp_cfg, nf, siren_cfg.out_features, key)
@@ -77,7 +126,7 @@ def train_insp_head(siren_cfg: SirenConfig, insp_cfg: InspConfig,
 
     @jax.jit
     def train_step(p, opt, step, k):
-        idx = jax.random.randint(k, (batch,), 0, coords.shape[0])
+        idx = jax.random.randint(k, (batch,), 0, feats.shape[0])
         l, g = jax.value_and_grad(loss_fn)(p, idx)
         p, opt, _ = A.adamw_update(ocfg, p, g, opt, step)
         return p, opt, step + 1, l
@@ -88,9 +137,38 @@ def train_insp_head(siren_cfg: SirenConfig, insp_cfg: InspConfig,
     return psi, float(loss)
 
 
+def edited_bank(siren_cfg: SirenConfig, insp_cfg: InspConfig, siren_params,
+                psis, example_coords, *, config=None, block: int | None = None,
+                store=None):
+    """Compile a dict of trained heads into ONE filter bank: a single
+    multi-output artifact whose shared feature prefix is computed once and
+    streamed through every head per row tile (``core.pipeline.compile_bank``,
+    DESIGN.md §9).  Returns ``(bank, fns)`` — ``bank`` is a
+    ``serve.bank.BankArtifact`` naming the outputs after the (sorted) edit
+    names, so ``edited_inr(bank=bank, head=name)`` routes by name;
+    ``fns[name](x)`` serves edit ``name`` through the bank (one dispatch
+    computes ALL edits, so calling several fns on the same rows costs one
+    pass each but shares the compiled artifact and its cache)."""
+    from repro.core.pipeline import compile_bank
+    from repro.serve.bank import BankArtifact
+    names = sorted(psis)
+    f = siren_fn(siren_cfg, siren_params)
+    art = BankArtifact(
+        compile_bank(f, [insp_head(psis[n]) for n in names],
+                     insp_cfg.grad_order, example_coords,
+                     config=config, block=block, store=store),
+        names)
+
+    def make(j):
+        def g(x):
+            return art.apply_batched(x)[j]
+        return g
+    return art, {n: make(j) for j, n in enumerate(names)}
+
+
 def edited_inr(siren_cfg: SirenConfig, insp_cfg: InspConfig, siren_params,
-               psi, *, compiled=None, store=None, example_coords=None,
-               config=None):
+               psi=None, *, compiled=None, store=None, example_coords=None,
+               config=None, bank=None, head=None):
     """The composite 'edited' INR g(x) = INSP(features_f(x)) — the function
     whose computation graph INR-Arch compiles to hardware.
 
@@ -102,7 +180,33 @@ def edited_inr(siren_cfg: SirenConfig, insp_cfg: InspConfig, siren_params,
 
     ``store`` + ``example_coords`` compile-or-restore the feature pipeline
     through the artifact store instead: repeated edits of the same SIREN
-    architecture (even across processes) skip re-compilation entirely."""
+    architecture (even across processes) skip re-compilation entirely.
+
+    ``bank`` + ``head`` route through a compiled filter bank instead
+    (``edited_bank`` / ``core.pipeline.compile_bank``): ``head`` picks the
+    bank output — an index, or a filter name when ``bank`` is a
+    ``serve.bank.BankArtifact`` — and g(x) reads it from the bank's single
+    multi-output pass (``psi`` is unused; the trained head is baked into
+    the bank)."""
+    if bank is not None:
+        if head is None:
+            raise ValueError("edited_inr(bank=...) needs head= (an output "
+                             "index, or a filter name for a BankArtifact)")
+        if isinstance(head, str):
+            if not hasattr(bank, "index_of"):
+                raise ValueError(
+                    "head by name needs a serve.bank.BankArtifact (e.g. "
+                    "from edited_bank); pass an integer output index for a "
+                    "bare CompiledBank")
+            j = bank.index_of(head)
+        else:
+            j = int(head)
+
+        def g(x):
+            return bank.apply_batched(x)[j]
+        return g
+    if psi is None:
+        raise ValueError("edited_inr needs psi (or bank= + head=)")
     f = siren_fn(siren_cfg, siren_params)
     if compiled is None and store is not None:
         if example_coords is None:

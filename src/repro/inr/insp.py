@@ -34,6 +34,17 @@ def insp_apply(params, feats):
     return h
 
 
+def insp_head(psi):
+    """The INSP head as a feature-space filter: a closure over ``psi``
+    suitable as one head of ``core.pipeline.compile_bank`` — it maps the
+    feature matrix the bank's shared prefix computes to this filter's
+    output.  Several heads over one INR merge into a single multi-output
+    artifact (DESIGN.md §9)."""
+    def head(feats):
+        return insp_apply(psi, feats)
+    return head
+
+
 def insp_pipeline(siren_cfg: SirenConfig, insp_cfg: InspConfig, f):
     """Returns edited(x, psi): INSP head `psi` applied to INR gradient
     features of `f` — the full computation the paper maps to hardware."""

@@ -30,7 +30,7 @@ UNARY = {
     "neg": lambda x: -x, "abs": jnp.abs, "relu": lambda x: jnp.maximum(x, 0),
     "sigmoid": jax.nn.sigmoid, "silu": jax.nn.silu, "square": jnp.square,
 }
-BINARY = {"mul", "add", "sub", "div"}
+BINARY = {"mul", "add", "sub", "div", "max", "min"}
 
 
 def eval_chain(h, chain, extras=()):
@@ -58,6 +58,10 @@ def eval_chain(h, chain, extras=()):
                 h = h + other
             elif op == "sub":
                 h = h - other
+            elif op == "max":
+                h = jnp.maximum(h, other)
+            elif op == "min":
+                h = jnp.minimum(h, other)
             else:
                 h = h / other
         else:
@@ -109,7 +113,8 @@ def fused_chain(x: jax.Array, chain, extras=(), *, block_rows: int = 256,
 _IR_UNARY = {"Sin": "sin", "Cos": "cos", "Exp": "exp", "Tanh": "tanh",
              "Neg": "neg", "Abs": "abs", "Sigmoid": "sigmoid"}
 # IR op -> kernel binary name
-_IR_BINARY = {"Mul": "mul", "Add": "add", "Sub": "sub", "Div": "div"}
+_IR_BINARY = {"Mul": "mul", "Add": "add", "Sub": "sub", "Div": "div",
+              "Maximum": "max", "Minimum": "min"}
 
 
 @dataclass(frozen=True)

@@ -23,6 +23,10 @@ kernel body.
     resident in VMEM, the full K reduced in one MXU dot per row tile (the
     region trades the standalone kernel's ``bk`` reduction tiling for
     never materializing the MM input/output in HBM).
+  * ``("concat", out, xs)`` — a last-axis Concat of region values (the
+    gradient-feature assembly of a filter bank, DESIGN.md §9): row-wise,
+    so it streams like any elementwise step; operand widths differ, so a
+    concat step is never column-tiled.
 
 The grid tiles ROWS (``bm`` from the HardwareConfig): every step's row-block
 is independent, which is exactly why the paper can stream its graphs through
@@ -66,6 +70,7 @@ from repro.kernels.fused_chain import eval_chain
 
 CHAIN = "chain"
 MM = "mm"
+CONCAT = "concat"
 
 
 @dataclass(frozen=True)
@@ -203,6 +208,9 @@ def _eval_steps(env, res, spec: RegionKernelSpec):
             env[out] = _eval_mm(env[x], res[w],
                                 res[bias] if bias is not None else None,
                                 w0, apply_sin)
+        elif step[0] == CONCAT:
+            _, out, xs = step
+            env[out] = jnp.concatenate([env[x] for x in xs], axis=-1)
         else:
             raise ValueError(f"region: unknown step kind {step[0]!r}")
         i += 1

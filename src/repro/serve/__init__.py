@@ -17,6 +17,11 @@ package is the deployment half:
                     through ``apply_batched``, optionally sharded across
                     devices via ``distributed.sharding.ShardingPolicy``
                     (multi-INR groups shard the stacked K axis);
+  * ``bank``      — BankArtifact: a compiled filter bank (one merged
+                    multi-output graph, ``core.pipeline.compile_bank``)
+                    bound to its filter names; ``register_bank`` routes
+                    grouped filter requests through ONE streamed pass
+                    (DESIGN.md §9);
   * ``async_engine`` — AsyncServingEngine: the same front door with
                     double-buffered dispatch and continuous batching at
                     chunk boundaries (``submit``/``drain``/``serve_async``,
@@ -25,6 +30,7 @@ package is the deployment half:
 """
 
 from repro.serve.async_engine import AsyncServingEngine
+from repro.serve.bank import BankArtifact
 from repro.serve.engine import ServingEngine
 from repro.serve.multi_inr import (MultiINRArtifact, bind_weights,
                                    const_payload)
@@ -33,5 +39,5 @@ from repro.serve.store import ArtifactStore, arch_signature, fn_fingerprint
 __all__ = [
     "ArtifactStore", "arch_signature", "fn_fingerprint",
     "MultiINRArtifact", "bind_weights", "const_payload",
-    "ServingEngine", "AsyncServingEngine",
+    "ServingEngine", "AsyncServingEngine", "BankArtifact",
 ]

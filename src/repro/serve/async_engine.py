@@ -16,7 +16,10 @@ This module overlaps those phases (DESIGN.md §8):
     two-deep: one executing, one queued).  When the queue is full the
     oldest item is retired first (blocking retrieval); between dispatches
     ready items are retired opportunistically via ``jax.Array.is_ready``
-    (non-blocking).
+    (non-blocking).  Retirement only WAITS on device results — the
+    host-side unpad/scatter of a retired chunk is deferred until right
+    after the NEXT dispatch launches, so that host work overlaps the new
+    chunk's device execution (``stats["host_unpad_s"]`` times it).
   * ``drain()`` flushes the remainders (full blocks through the jitted
     block step, one final padded block), retires everything in flight, and
     returns results for every outstanding ticket IN SUBMISSION ORDER.
@@ -143,6 +146,7 @@ class AsyncServingEngine(ServingEngine):
             raise ValueError(f"inflight must be >= 1, got {inflight}")
         self.inflight = int(inflight)
         self._tickets: list[_Ticket] = []
+        self._retired: deque[_InFlight] = deque()   # awaiting host unpad
         self._drained_upto = 0
         # sig -> OrderedDict[inr_id -> _Pending]  (admission queues)
         self._pending: "OrderedDict[str, OrderedDict[str, _Pending]]" = \
@@ -154,6 +158,7 @@ class AsyncServingEngine(ServingEngine):
                   "async_multi_chunks", "admissions", "evictions",
                   "max_inflight"):
             self.stats.setdefault(k, 0)
+        self.stats.setdefault("host_unpad_s", 0.0)
 
     # -- submission --------------------------------------------------------
 
@@ -206,6 +211,7 @@ class AsyncServingEngine(ServingEngine):
         self._pump(flush=True)
         while self._queue:
             self._retire(self._queue.popleft())
+        self._unpad_retired()
         out = [self._finalize(t)
                for t in self._tickets[self._drained_upto:]]
         self._drained_upto = len(self._tickets)
@@ -278,6 +284,9 @@ class AsyncServingEngine(ServingEngine):
         self._queue.append(item)
         self.stats["max_inflight"] = max(self.stats["max_inflight"],
                                          len(self._queue))
+        # the item just dispatched is executing on-device NOW — scatter any
+        # retired results while it runs (host unpad overlaps device exec)
+        self._unpad_retired()
 
     def _dispatch_single_chunk(self, sig: str, p: _Pending,
                                chunk_rows: int) -> None:
@@ -349,10 +358,28 @@ class AsyncServingEngine(ServingEngine):
             self._retire(self._queue.popleft())
 
     def _retire(self, item: _InFlight) -> None:
+        """Block until the item's device results are ready, then queue it
+        for host-side scatter.  The scatter itself (``_unpad_retired``) is
+        DEFERRED: ``_dispatch`` runs it right after launching the next
+        chunk, so unpadding retired results overlaps that chunk's device
+        execution instead of sitting on the critical path."""
         t0 = time.perf_counter()
         self.stats["queue_wait_s"] += t0 - item.t_dispatch
         jax.block_until_ready(item.outs)
         self.stats["device_exec_s"] += time.perf_counter() - t0
+        self._retired.append(item)
+
+    def _unpad_retired(self) -> None:
+        """Scatter every retired item's rows into its tickets (dropping
+        padding — it never reaches a caller), timed as ``host_unpad_s``."""
+        if not self._retired:
+            return
+        t0 = time.perf_counter()
+        while self._retired:
+            self._scatter_item(self._retired.popleft())
+        self.stats["host_unpad_s"] += time.perf_counter() - t0
+
+    def _scatter_item(self, item: _InFlight) -> None:
         if item.kind == "multi":
             # outs: each [nb, K, block, ...] -> per-lane flat rows
             flat = [jnp.moveaxis(o, 0, 1).reshape(
@@ -413,6 +440,8 @@ class AsyncServingEngine(ServingEngine):
     def describe(self) -> str:
         st = self.stats
         return (super().describe()
+                + f"\n  async phases: host_unpad "
+                f"{st['host_unpad_s'] * 1e3:.1f}ms (overlapped)"
                 + f"\n  async: inflight<= {self.inflight} "
                 f"(peak {st['max_inflight']}), "
                 f"{st['async_chunks']} chunks / {st['async_blocks']} blocks "

@@ -1,0 +1,323 @@
+"""Filter-bank compiler (DESIGN.md §9).
+
+Covers the ISSUE-8 acceptance surface: cross-graph gradient sharing
+(merged node count strictly below the per-filter sum), multi-output fused
+regions (one streamed pass emits every filter output; VMEM/coverage
+invariants hold), bit-exact parity at orders 1-3 on non-block-multiple
+batches against per-filter baselines, the >= 2x dispatch and modeled-HBM
+wins of a 4-filter bank, artifact-store round-trips under the bank
+signature, ServingEngine routing of mixed filter requests, and an honest
+deadlock check of the merged dataflow mapping.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.siren import InspConfig, SirenConfig
+from repro.core import pipeline as P
+from repro.core.config import HardwareConfig
+from repro.core.dataflow import DataflowGraph, map_to_dataflow
+from repro.core.graph import merge_graphs
+from repro.core.pipeline import CompiledBank, compile_bank
+from repro.core.regions import region_dispatch_table
+from repro.inr.gradnet import num_features
+from repro.inr.insp import insp_apply, insp_head, insp_init
+from repro.inr.siren import siren_fn, siren_init
+from repro.serve import ArtifactStore, BankArtifact, ServingEngine
+
+CFG = HardwareConfig(block=8, use_pallas=True, fuse_regions=True)
+
+
+@pytest.fixture(autouse=True)
+def fresh_cache():
+    P.clear_compile_cache()
+    yield
+    P.clear_compile_cache()
+
+
+@pytest.fixture(scope="module")
+def siren():
+    cfg = SirenConfig(hidden_features=32, hidden_layers=2)
+    params = siren_init(cfg, jax.random.PRNGKey(0))
+    return cfg, siren_fn(cfg, params)
+
+
+def _heads(siren_cfg, order, n, hidden=16):
+    icfg = InspConfig(hidden=hidden, layers=2, grad_order=order)
+    nf = num_features(siren_cfg.in_features, siren_cfg.out_features, order)
+    return [insp_head(insp_init(icfg, nf, 1, jax.random.PRNGKey(i + 1)))
+            for i in range(n)]
+
+
+def _coords(n, d=2, seed=0):
+    return jnp.asarray(
+        np.random.RandomState(seed).uniform(-1, 1, (n, d)), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# parity: the bank is bit-exact against per-filter baselines
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("order", [1, 2, 3])
+def test_bank_parity_orders(siren, order):
+    scfg, f = siren
+    heads = _heads(scfg, order, 3)
+    ex = _coords(64)
+    bank = compile_bank(f, heads, order, ex, config=CFG)
+    xs = _coords(37, seed=order)           # not a block multiple
+    outs = bank.apply_batched(xs)
+    assert len(outs) == 3
+    for j, h in enumerate(heads):
+        solo = compile_bank(f, [h], order, ex, config=CFG)
+        (ref,) = solo.apply_batched(xs)
+        np.testing.assert_array_equal(np.asarray(outs[j]), np.asarray(ref))
+
+
+def test_bank_single_rows_and_apply(siren):
+    scfg, f = siren
+    heads = _heads(scfg, 2, 2)
+    ex = _coords(64)
+    bank = compile_bank(f, heads, 2, ex, config=CFG)
+    x1 = _coords(1, seed=9)
+    outs = bank.apply_batched(x1)
+    assert all(o.shape[0] == 1 for o in outs)
+    # apply (the trace-batch executor path) agrees with apply_batched
+    ref = bank.apply(ex)
+    outs_b = bank.apply_batched(ex)
+    for a, b in zip(ref, outs_b):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# cross-graph sharing + the >= 2x acceptance ratios
+# ---------------------------------------------------------------------------
+
+def test_merged_graph_smaller_than_sum(siren):
+    scfg, f = siren
+    heads = _heads(scfg, 2, 4)
+    bank = compile_bank(f, heads, 2, _coords(64), config=CFG)
+    r = bank.report
+    assert r.n_heads == 4
+    assert r.nodes_bank < r.nodes_loop      # CSE collapsed the shared prefix
+    assert len(bank.graph.outputs) == 4
+    assert len(bank.plan.inputs) == 1       # Inputs merged across graphs
+
+
+def test_bank_dispatch_and_hbm_ratios(siren):
+    scfg, f = siren
+    heads = _heads(scfg, 2, 4)
+    bank = compile_bank(f, heads, 2, _coords(64), config=CFG)
+    r = bank.report
+    assert r.dispatches_loop >= 2 * r.dispatches_bank
+    assert r.hbm_block_loop >= 2 * r.hbm_block_bank
+    assert r.row_cycles_bank <= r.row_cycles_loop
+    # the merged schedule's dispatch table matches the report
+    assert len(region_dispatch_table(bank.plan, bank.region_plan)) \
+        == r.dispatches_bank
+
+
+def test_bank_never_worse_than_loop_under_autoconfig(siren):
+    scfg, f = siren
+    heads = _heads(scfg, 2, 3)
+    bank = compile_bank(f, heads, 2, _coords(64), config="auto",
+                        base_config=HardwareConfig(block=8, use_pallas=True))
+    r = bank.report
+    assert r.row_cycles_bank <= r.row_cycles_loop
+    assert r.dispatches_bank <= r.dispatches_loop
+
+
+# ---------------------------------------------------------------------------
+# multi-output regions: invariants
+# ---------------------------------------------------------------------------
+
+def test_multi_output_region_invariants(siren):
+    scfg, f = siren
+    heads = _heads(scfg, 2, 4)
+    bank = compile_bank(f, heads, 2, _coords(64), config=CFG)
+    rp = bank.region_plan
+    assert rp.validate()
+    assert rp.peak_vmem_bytes() <= rp.config.vmem_budget
+    multi = [reg for reg in rp.fused_regions() if len(reg.outputs) >= 2]
+    assert multi, "the bank must fuse a region with multiple output sinks"
+    for reg in multi:
+        assert reg.spec is not None
+        assert tuple(reg.spec.outputs) == tuple(reg.outputs)
+        # every bank output leaves SOME region exactly once
+    emitted = [o for reg in rp.regions for o in reg.outputs]
+    for o in bank.graph.outputs:
+        assert emitted.count(o) == 1
+
+
+def test_merge_graphs_slices(siren):
+    scfg, f = siren
+    heads = _heads(scfg, 1, 2)
+    ex = _coords(64)
+    per = [P._trace_filter_graph(f, h, 1, 64, ex.shape, "float32")
+           for h in heads]
+    merged, slices = merge_graphs(per)
+    assert slices == [(0, 1), (1, 2)]
+    assert len(merged.outputs) == 2
+    merged.validate()
+    # merge is count-preserving before CSE: live nodes only
+    assert len(merged.topo_order()) <= sum(len(g.topo_order()) for g in per)
+
+
+def test_head_with_multiple_outputs_rejected(siren):
+    scfg, f = siren
+    bad = lambda feats: (feats[:, :1], feats[:, 1:2])
+    with pytest.raises(ValueError, match="exactly one array"):
+        compile_bank(f, [bad], 1, _coords(64), config=CFG)
+
+
+# ---------------------------------------------------------------------------
+# dataflow: the merged mapping stays deadlock-free and honest
+# ---------------------------------------------------------------------------
+
+def test_bank_dataflow_deadlock_free(siren):
+    scfg, f = siren
+    heads = _heads(scfg, 2, 3)
+    bank = compile_bank(f, heads, 2, _coords(64), config=CFG)
+    design = map_to_dataflow(bank.graph, plan=bank.plan, config=bank.config,
+                             region_plan=bank.region_plan)
+    dg = DataflowGraph(design)
+    dead, latency, _ = dg.check()
+    assert not dead and latency > 0
+    depths = dg.observed_depths()
+    dead, lat_d, _ = dg.check(depths)
+    assert not dead and lat_d >= latency
+    # every non-resident bank output has a sink process
+    sinks = [p for p in design.processes if p.name.startswith("sink")]
+    streamed = [o for o in bank.graph.outputs if o not in bank.plan.resident]
+    assert len(sinks) == len(streamed)
+
+
+# ---------------------------------------------------------------------------
+# caching + store round-trip
+# ---------------------------------------------------------------------------
+
+def test_bank_cache_hit(siren):
+    scfg, f = siren
+    heads = _heads(scfg, 1, 2)
+    ex = _coords(64)
+    b1 = compile_bank(f, heads, 1, ex, config=CFG)
+    b2 = compile_bank(f, heads, 1, ex, config=CFG)
+    assert b1 is b2
+
+
+def test_bank_store_roundtrip(siren, tmp_path):
+    scfg, f = siren
+    heads = _heads(scfg, 2, 3)
+    ex = _coords(64)
+    store = ArtifactStore(tmp_path)
+    bank = compile_bank(f, heads, 2, ex, config=CFG, store=store)
+    xs = _coords(21, seed=5)
+    ref = bank.apply_batched(xs)
+
+    P.clear_compile_cache()
+    restored = compile_bank(f, heads, 2, ex, config=CFG, store=store)
+    assert isinstance(restored, CompiledBank)
+    assert restored.signature == bank.signature
+    assert restored.cg.provenance == "store"
+    outs = restored.apply_batched(xs)
+    for a, b in zip(outs, ref):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_bank_artifact_from_store(siren, tmp_path):
+    scfg, f = siren
+    heads = _heads(scfg, 2, 2)
+    ex = _coords(64)
+    store = ArtifactStore(tmp_path)
+    bank = compile_bank(f, heads, 2, ex, config=CFG, store=store)
+    art = BankArtifact.from_store(store, bank.signature, ["a", "b"])
+    assert art.n_filters == 2 and art.index_of("b") == 1
+    xs = _coords(13, seed=7)
+    for a, b in zip(art.apply_batched(xs), bank.apply_batched(xs)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    with pytest.raises(ValueError):
+        BankArtifact(bank, ["only-one"])      # id count must match outputs
+
+
+# ---------------------------------------------------------------------------
+# engine routing
+# ---------------------------------------------------------------------------
+
+def test_engine_routes_mixed_filter_requests(siren, tmp_path):
+    scfg, f = siren
+    heads = _heads(scfg, 2, 3)
+    ex = _coords(64)
+    store = ArtifactStore(tmp_path)
+    bank = compile_bank(f, heads, 2, ex, config=CFG, store=store)
+    solo = compile_bank(f, [heads[0]], 2, ex, config=CFG)
+
+    eng = ServingEngine(store)
+    sig = eng.register_bank(["fa", "fb", "fc"], bank)
+    eng.register("plain", solo.cg)
+
+    xs = [_coords(n, seed=10 + i) for i, n in enumerate([13, 7, 21, 5])]
+    res = eng.serve([("fb", xs[0]), ("plain", xs[1]),
+                     ("fa", xs[2]), ("fb", xs[3])])
+    full = bank.apply_batched(jnp.concatenate([xs[0], xs[2], xs[3]]))
+    np.testing.assert_array_equal(np.asarray(res[0][0]),
+                                  np.asarray(full[1][:13]))
+    np.testing.assert_array_equal(np.asarray(res[2][0]),
+                                  np.asarray(full[0][13:34]))
+    np.testing.assert_array_equal(np.asarray(res[3][0]),
+                                  np.asarray(full[1][34:39]))
+    (ref_plain,) = solo.apply_batched(xs[1])
+    np.testing.assert_array_equal(np.asarray(res[1][0]),
+                                  np.asarray(ref_plain))
+    assert eng.stats["bank_groups"] == 1      # one pass served all 3 requests
+
+    # a cold engine restores the bank from the store by signature
+    eng2 = ServingEngine(store)
+    eng2.register_bank(["fa", "fb", "fc"], signature=sig)
+    res2 = eng2.serve([("fc", xs[0])])
+    np.testing.assert_array_equal(
+        np.asarray(res2[0][0]),
+        np.asarray(bank.apply_batched(xs[0])[2]))
+    assert eng2.stats["restores"] == 1
+
+
+def test_editing_bank_front_door():
+    """train_insp_heads -> edited_bank -> edited_inr(bank=, head=name):
+    the editing workload rides the bank API end to end, by filter name."""
+    from repro.inr.editing import edited_bank, edited_inr, train_insp_heads
+    from repro.inr.encode import image_coords
+    from repro.inr.siren import siren_init
+
+    scfg = SirenConfig(hidden_features=32, hidden_layers=2)
+    sp = siren_init(scfg, jax.random.PRNGKey(0))
+    icfg = InspConfig(hidden=16, layers=2, grad_order=1)
+    res = 8
+    img = jnp.asarray(
+        np.random.RandomState(0).rand(res, res), jnp.float32)
+    heads = train_insp_heads(scfg, icfg, sp,
+                             {"a": img, "b": 1.0 - img}, steps=5)
+    assert sorted(heads) == ["a", "b"]
+
+    ex = image_coords(res)
+    bank, fns = edited_bank(scfg, icfg, sp,
+                            {n: psi for n, (psi, _) in heads.items()}, ex)
+    assert isinstance(bank, BankArtifact) and bank.n_filters == 2
+    x = image_coords(res)[:13]
+    g = edited_inr(scfg, icfg, sp, bank=bank, head="b")
+    np.testing.assert_array_equal(np.asarray(g(x)), np.asarray(fns["b"](x)))
+    np.testing.assert_array_equal(np.asarray(g(x)),
+                                  np.asarray(bank.apply_batched(x)[1]))
+    with pytest.raises(ValueError, match="needs head"):
+        edited_inr(scfg, icfg, sp, bank=bank)
+    with pytest.raises(ValueError, match="BankArtifact"):
+        edited_inr(scfg, icfg, sp, bank=bank.cg, head="b")
+
+
+def test_engine_bank_id_clash_rejected(siren):
+    scfg, f = siren
+    heads = _heads(scfg, 1, 2)
+    bank = compile_bank(f, heads, 1, _coords(64), config=CFG)
+    eng = ServingEngine()
+    eng.register("x", bank.cg)                # unrelated plain route
+    with pytest.raises(ValueError, match="already registered"):
+        eng.register_bank(["x", "y"], bank)
