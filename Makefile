@@ -2,7 +2,7 @@
 
 PY ?= python
 
-.PHONY: test test-fast serve-smoke async-smoke bench bench-segments bench-regions bench-regions-check bench-bank bench-bank-check bench-pipeline bench-autotune bench-serve bench-json
+.PHONY: test test-fast serve-smoke async-smoke obs-smoke bench bench-segments bench-regions bench-regions-check bench-bank bench-bank-check bench-pipeline bench-autotune bench-serve bench-obs bench-obs-check bench-json
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -15,6 +15,9 @@ serve-smoke:
 
 async-smoke:
 	PYTHONPATH=src $(PY) scripts/async_serve_smoke.py
+
+obs-smoke:
+	PYTHONPATH=src $(PY) scripts/obs_smoke.py
 
 bench:
 	PYTHONPATH=src $(PY) -m benchmarks.run
@@ -42,6 +45,12 @@ bench-autotune:
 
 bench-serve:
 	PYTHONPATH=src $(PY) -m benchmarks.run serve
+
+bench-obs:
+	PYTHONPATH=src $(PY) -m benchmarks.run obs
+
+bench-obs-check:
+	PYTHONPATH=src $(PY) -m benchmarks.run obs --check
 
 bench-json:
 	PYTHONPATH=src $(PY) -m benchmarks.run --json

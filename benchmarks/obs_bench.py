@@ -1,0 +1,132 @@
+"""Observability overhead benchmark: telemetry must be ~free.
+
+The obs layer (DESIGN.md §10) leaves its span/metric call sites in every
+compile stage and serve phase permanently, so its cost model is "one
+attribute read when disabled, one perf_counter when enabled".  This
+benchmark prices that claim on the seed SIREN serving workload:
+
+  * sync serve rounds with tracing DISABLED vs ENABLED, interleaved to
+    decorrelate from thermal/jit drift, best-of-N each — the ratio is the
+    telemetry overhead the ``--check`` gate holds at ≤5% (plus a small
+    absolute epsilon for timer noise at sub-ms round times);
+  * Chrome/Perfetto export cost for the collected span set;
+  * one ``drift_report`` (compile-time model vs measured wall per unit).
+
+Emits ``obs/...`` rows; the check hook is SELF-GATED — it fails on the
+current run's ratio and needs no committed baseline.
+"""
+
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.configs.siren import SirenConfig
+from repro.core import pipeline as P
+from repro.core.config import DEFAULT_CONFIG
+from repro.inr.siren import siren_fn, siren_init
+from repro.obs import drift_report
+from repro.obs.tracing import TRACER
+from repro.serve import ServingEngine
+
+OVERHEAD_LIMIT = 1.05          # enabled / disabled wall ratio
+ABS_EPS_S = 0.005              # timer-noise floor at small round times
+
+
+def run(hidden: int = 32, layers: int = 1, order: int = 2,
+        n_requests: int = 8, n_rows: int = 48, rounds: int = 7):
+    cfg = SirenConfig(hidden_features=hidden, hidden_layers=layers)
+    x = jax.random.uniform(jax.random.PRNGKey(1),
+                           (cfg.batch, cfg.in_features), jnp.float32, -1, 1)
+    hw = DEFAULT_CONFIG.replace(block=16, chunk_blocks=4)
+    P.clear_compile_cache()
+    cg = P.compile_gradient(siren_fn(cfg, siren_init(
+        cfg, jax.random.PRNGKey(0))), order, x, config=hw)
+    reqs = [("i0", jax.random.uniform(jax.random.PRNGKey(100 + j),
+                                      (n_rows, cfg.in_features),
+                                      jnp.float32, -1, 1))
+            for j in range(n_requests)]
+
+    with tempfile.TemporaryDirectory(prefix="inr-obs-bench-") as root:
+        eng = ServingEngine(root + "/s")
+        eng.register("i0", cg)
+        eng.serve(reqs)                          # warm every jit cache
+
+        def round_(enabled: bool) -> float:
+            TRACER.clear()
+            if enabled:
+                TRACER.enable()
+            else:
+                TRACER.disable()
+            t0 = time.perf_counter()
+            jax.block_until_ready(eng.serve(reqs))
+            dt = time.perf_counter() - t0
+            TRACER.disable()
+            return dt
+
+        on, off = [], []
+        for _ in range(rounds):                  # interleaved, best-of-N
+            off.append(round_(False))
+            on.append(round_(True))
+        t_off, t_on = min(off), min(on)
+        ratio = t_on / max(t_off, 1e-9)
+        emit("obs/serve/disabled_us", t_off * 1e6,
+             f"n_requests={n_requests} rounds={rounds}")
+        emit("obs/serve/enabled_us", t_on * 1e6,
+             f"overhead={ratio:.3f}x limit={OVERHEAD_LIMIT}x",
+             overhead_ratio=ratio, disabled_s=t_off, enabled_s=t_on,
+             abs_eps_s=ABS_EPS_S, limit=OVERHEAD_LIMIT)
+
+        with TRACER.enabled_scope():
+            eng.serve(reqs)
+        t0 = time.perf_counter()
+        doc = TRACER.export_chrome_json()
+        export_us = (time.perf_counter() - t0) * 1e6
+        emit("obs/trace/export_us", export_us,
+             f"events={len(TRACER.events)} bytes={len(doc)}",
+             n_events=len(TRACER.events), json_bytes=len(doc))
+        TRACER.clear()
+
+    t0 = time.perf_counter()
+    rep = drift_report(cg, iters=3, warmup=1)
+    report_us = (time.perf_counter() - t0) * 1e6
+    emit("obs/drift/report_us", report_us,
+         f"units={len(rep.units)} max_drift={rep.max_drift:.2f}x "
+         f"min_headroom={rep.min_headroom}",
+         max_drift=rep.max_drift, min_headroom=rep.min_headroom,
+         units=len(rep.units))
+
+
+def check(current: list[dict], baseline: dict) -> list[str]:
+    """Self-gated: the enabled/disabled ratio on THIS run must stay within
+    ``OVERHEAD_LIMIT`` (after the absolute noise floor); drift FIFO
+    headroom must be non-negative.  The committed baseline, when present,
+    is ignored — the gate is about the run itself."""
+    failures = []
+    for rec in current:
+        if rec["name"] == "obs/serve/enabled_us":
+            slack = 1.0 + ABS_EPS_S / max(rec["disabled_s"], 1e-9)
+            if rec["overhead_ratio"] > OVERHEAD_LIMIT * slack:
+                failures.append(
+                    f"telemetry overhead {rec['overhead_ratio']:.3f}x "
+                    f"exceeds {OVERHEAD_LIMIT}x gate")
+        if rec["name"] == "obs/drift/report_us":
+            if rec["min_headroom"] < 0:
+                failures.append(
+                    f"FIFO high-water exceeds configured depth "
+                    f"(min headroom {rec['min_headroom']})")
+    return failures
+
+
+check.self_gated = True        # run the gate even without a baseline file
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()
+    fails = check(__import__("benchmarks.common", fromlist=["RESULTS"]).RESULTS, {})
+    for f in fails:
+        print(f"# CHECK FAILED obs: {f}")
+    raise SystemExit(1 if fails else 0)

@@ -11,8 +11,11 @@
 # the bank check gates the filter-bank compiler (bit-exact parity vs
 # per-filter baselines, and the loop must cost >= 2x the bank in both
 # dispatches and modeled HBM bytes, vs results/bank_baseline.json);
-# then a fast gate without the slow training tests; then the full suite
-# (including @pytest.mark.slow).
+# the obs smoke gates the telemetry layer (traced compile+serve exports
+# valid Perfetto JSON + Prometheus text, drift reports on orders 1-3 keep
+# non-negative FIFO headroom) and the obs check holds telemetry overhead
+# at <=5%; then a fast gate without the slow training tests; then the
+# full suite (including @pytest.mark.slow).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m repro.core.autoconfig
@@ -20,5 +23,7 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python scripts/serve_smoke.py
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python scripts/async_serve_smoke.py
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.run regions --check
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.run bank --check
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python scripts/obs_smoke.py
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.run obs --check
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q -m "not slow" "$@"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

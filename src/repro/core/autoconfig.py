@@ -208,7 +208,7 @@ def _mm_segment_ids(plan: SegmentPlan) -> tuple[int, ...]:
 # the search
 # ---------------------------------------------------------------------------
 
-def resolve_config(g: ComputeGraph, plan: SegmentPlan | None = None,
+def _resolve_config_impl(g: ComputeGraph, plan: SegmentPlan | None = None,
                    mode: str = "auto", *,
                    base: HardwareConfig | None = None,
                    mm_budget: int | None = None,
@@ -378,6 +378,26 @@ def resolve_config(g: ComputeGraph, plan: SegmentPlan | None = None,
         chosen = variants[best_i]
 
     return finish(chosen)
+
+
+def resolve_config(g: ComputeGraph, plan: SegmentPlan | None = None,
+                   mode: str = "auto", **kw) -> AutoConfigResult:
+    """Pick the HardwareConfig with the dataflow latency oracle — see
+    ``_resolve_config_impl`` for the search itself and every parameter.
+    This wrapper is the telemetry boundary: the whole search runs under a
+    ``compile.autoconfig`` span, and the searched/candidate counts land on
+    the obs registry (``autoconfig_searches`` / ``autoconfig_candidates``)."""
+    from repro.obs.metrics import counter
+    from repro.obs.tracing import TRACER
+    with TRACER.span("compile.autoconfig", cat="compile", mode=mode) as sp:
+        res = _resolve_config_impl(g, plan, mode, **kw)
+        sp.set(candidates=len(res.candidates),
+               predicted_row_cycles=res.predicted_row_cycles)
+    counter("autoconfig_searches", "resolve_config invocations").inc()
+    counter("autoconfig_candidates",
+            "configs scored by the autoconfig oracle").inc(
+        len(res.candidates))
+    return res
 
 
 def _refine_region_cuts(plan: SegmentPlan, chosen: HardwareConfig,

@@ -321,14 +321,20 @@ def streaming_executor(g: ComputeGraph, block: int | None = None, *,
     """
     from repro.core.config import as_hardware_config
     from repro.core.pipeline import compile_from_graph
+    from repro.obs.metrics import counter
 
     cfg = as_hardware_config(config, block=block,
                              use_pallas=use_pallas).resolved()
     key = (g, plan, cfg)
     cg = _GRAPH_CACHE.get(key)
     if cg is None:
+        counter("graph_cache_misses",
+                "streaming_executor per-graph cache misses").inc()
         cg = compile_from_graph(g, config=cfg, plan=plan, emit_source=False)
         _GRAPH_CACHE[key] = cg
+    else:
+        counter("graph_cache_hits",
+                "streaming_executor per-graph cache hits").inc()
     if dispatch_log is not None:
         dispatch_log.extend(cg.dispatch)
     return cg.apply

@@ -51,6 +51,8 @@ from repro.core.graph import ComputeGraph
 from repro.core.segment import (SegmentPlan, apply_hardware_config,
                                 build_segment_plan, dispatch_table,
                                 INTERPRET, _p)
+from repro.obs.metrics import MetricsView, counter as _obs_counter
+from repro.obs.tracing import TRACER
 
 
 class CompiledGradient:
@@ -83,6 +85,7 @@ class CompiledGradient:
         self.region_plan = region_plan    # RegionPlan (None: per-segment)
         self.provenance = "trace"         # "trace" | "store" (set on restore)
         self.cache_hits = 0               # in-process hits served (metadata)
+        self.perf_model = None            # per-unit predictions (obs.drift)
         self._signature = None            # lazy architecture signature
         self._stored_in: set[str] = set()  # store roots known to hold this
         self._dataflow: dict[tuple, dict] = {}
@@ -290,12 +293,17 @@ class CompiledGradient:
         if cached is None:
             from repro.core.dataflow import map_to_dataflow
             from repro.core.fifo_opt import optimize_fifo_depths
-            design = map_to_dataflow(
-                self.graph, block=db, mm_parallel=mm_parallel,
-                plan=self.plan, config=None if mm_parallel is not None else cfg,
-                region_plan=None if mm_parallel is not None
-                else self.region_plan)
-            res = optimize_fifo_depths(design, config=cfg)
+            with TRACER.span("compile.dataflow_map", cat="compile",
+                             dataflow_block=db):
+                design = map_to_dataflow(
+                    self.graph, block=db, mm_parallel=mm_parallel,
+                    plan=self.plan,
+                    config=None if mm_parallel is not None else cfg,
+                    region_plan=None if mm_parallel is not None
+                    else self.region_plan)
+            with TRACER.span("compile.fifo_opt", cat="compile",
+                             streams=len(design.streams)):
+                res = optimize_fifo_depths(design, config=cfg)
             cached = {"design": design, "fifo": res, **res.summary()}
             self._dataflow[key] = cached
         return cached
@@ -356,7 +364,9 @@ def compile_from_graph(g: ComputeGraph, *,
     cfg = as_hardware_config(config, block=block,
                              use_pallas=use_pallas).resolved()
     if plan is None:
-        plan = build_segment_plan(g, config=cfg)
+        with TRACER.span("compile.segment_plan", cat="compile") as sp:
+            plan = build_segment_plan(g, config=cfg)
+            sp.set(segments=len(plan.segments))
     B = plan.batch
     cfg = cfg.clamped(B)
     if B % cfg.block != 0:
@@ -374,7 +384,9 @@ def compile_from_graph(g: ComputeGraph, *,
     region_plan = None
     if cfg.fuse_regions:
         from repro.core.regions import build_region_plan
-        region_plan = build_region_plan(plan, cfg)
+        with TRACER.span("compile.region_plan", cat="compile") as sp:
+            region_plan = build_region_plan(plan, cfg)
+            sp.set(regions=len(region_plan.regions))
 
     if not cfg.use_pallas:
         dispatch = [(s.id, s.kind, INTERPRET) for s in plan.segments]
@@ -386,20 +398,30 @@ def compile_from_graph(g: ComputeGraph, *,
 
     # precompute residents once: the paper's on-chip tensors, never re-derived
     residents: dict[int, jax.Array] = {}
-    for nid in plan.resident_order():
-        n = g.nodes[nid]
-        if n.op == "Const":
-            residents[nid] = jnp.asarray(n.const)
-        else:
-            residents[nid] = _eval_node(n, [residents[i] for i in n.inputs])
+    with TRACER.span("compile.residents", cat="compile"):
+        for nid in plan.resident_order():
+            n = g.nodes[nid]
+            if n.op == "Const":
+                residents[nid] = jnp.asarray(n.const)
+            else:
+                residents[nid] = _eval_node(n, [residents[i]
+                                                for i in n.inputs])
 
-    source = (codegen.emit_python(g, plan=plan, config=cfg,
-                                  region_plan=region_plan)
-              if emit_source else None)
-    return CompiledGradient(g, plan, config=cfg, residents=residents,
-                            dispatch=dispatch, source=source, fn=fn,
-                            order=order, autoconfig=autoconfig,
-                            region_plan=region_plan)
+    if emit_source:
+        with TRACER.span("compile.codegen", cat="compile"):
+            source = codegen.emit_python(g, plan=plan, config=cfg,
+                                         region_plan=region_plan)
+    else:
+        source = None
+    cg = CompiledGradient(g, plan, config=cfg, residents=residents,
+                          dispatch=dispatch, source=source, fn=fn,
+                          order=order, autoconfig=autoconfig,
+                          region_plan=region_plan)
+    # the oracle's per-unit predictions, recorded on the artifact so a
+    # DriftReport can later compare them against measured wall (obs.drift)
+    from repro.obs.drift import build_perf_model
+    cg.perf_model = build_perf_model(plan, region_plan, cfg)
+    return cg
 
 
 # ---------------------------------------------------------------------------
@@ -407,8 +429,21 @@ def compile_from_graph(g: ComputeGraph, *,
 # ---------------------------------------------------------------------------
 
 _CACHE: dict[tuple, CompiledGradient] = {}
-_STATS = {"hits": 0, "misses": 0,
-          "store_hits": 0, "store_misses": 0, "store_puts": 0}
+# the compile-layer accounting, now registry metrics (DESIGN.md §10); the
+# dict-shaped view keeps every ``_STATS["hits"] += 1`` call site and every
+# external reader working verbatim
+_STATS = MetricsView({
+    "hits": _obs_counter("compile_cache_hits",
+                         "in-process compile cache hits"),
+    "misses": _obs_counter("compile_cache_misses",
+                           "in-process compile cache misses"),
+    "store_hits": _obs_counter("compile_store_hits",
+                               "artifact-store restore hits"),
+    "store_misses": _obs_counter("compile_store_misses",
+                                 "artifact-store restore misses"),
+    "store_puts": _obs_counter("compile_store_puts",
+                               "artifacts persisted to a store"),
+})
 
 
 def _fn_key(fn):
@@ -465,8 +500,12 @@ def _trace_graph(fn, order: int, trace_b: int, shape, dtype) -> ComputeGraph:
     out = jax.eval_shape(fn, abstract)
     gfn = paper_gradients(fn, order, out_features=out.shape[-1],
                           in_features=shape[-1])
-    g = extract_graph(gfn, abstract)
-    optimize(g)
+    with TRACER.span("compile.trace", cat="compile", order=order,
+                     trace_b=trace_b):
+        g = extract_graph(gfn, abstract)
+    with TRACER.span("compile.passes", cat="compile") as sp:
+        optimize(g)
+        sp.set(nodes=len(g.nodes))
     return g
 
 
@@ -562,8 +601,10 @@ def compile_gradient(fn, order: int, example_coords, *,
             return cg
         _STATS["store_misses"] += 1
 
-    g = _trace_graph(fn, order, trace_b, shape, dtype)
-    cg = compile_from_graph(g, config=cfg, fn=fn, order=order)
+    with TRACER.span("compile", cat="compile", order=order,
+                     mode="explicit"):
+        g = _trace_graph(fn, order, trace_b, shape, dtype)
+        cg = compile_from_graph(g, config=cfg, fn=fn, order=order)
     _CACHE[key] = cg
     if store is not None:
         store.put(cg, request_key=rk)
@@ -624,29 +665,32 @@ def _compile_auto(fn, order: int, shape, dtype, *,
             return cg
         _STATS["store_misses"] += 1
 
-    g = _trace_graph(fn, order, trace_b, shape, dtype)
-    plan = build_segment_plan(g)
-    # on TPU the analytic winner is refined against REAL apply_batched
-    # timings (block + bm/bn tile re-rank); off-TPU the search stays
-    # analytic — deterministic and cheap, what the tests rely on
-    measure = None
-    if jax.default_backend() == "tpu":
-        from repro.core.autoconfig import make_apply_batched_measure
-        measure = make_apply_batched_measure(g, plan)
-    result = resolve_config(g, plan, base=base, measure=measure)
-    cfg = result.config
+    with TRACER.span("compile", cat="compile", order=order, mode="auto"):
+        g = _trace_graph(fn, order, trace_b, shape, dtype)
+        with TRACER.span("compile.segment_plan", cat="compile"):
+            plan = build_segment_plan(g)
+        # on TPU the analytic winner is refined against REAL apply_batched
+        # timings (block + bm/bn tile re-rank); off-TPU the search stays
+        # analytic — deterministic and cheap, what the tests rely on
+        measure = None
+        if jax.default_backend() == "tpu":
+            from repro.core.autoconfig import make_apply_batched_measure
+            measure = make_apply_batched_measure(g, plan)
+        result = resolve_config(g, plan, base=base, measure=measure)
+        cfg = result.config
 
-    resolved_key = (_fn_key(fn), int(order), (trace_b,) + tuple(shape[1:]),
-                    dtype, cfg.clamped(trace_b))
-    cg = _CACHE.get(resolved_key)
-    if cg is None:
-        cg = compile_from_graph(g, config=cfg, plan=plan, fn=fn, order=order,
-                                autoconfig=result)
-        _CACHE[resolved_key] = cg
-    elif cg.autoconfig is None:
-        # the search resolved to a config already compiled explicitly (e.g.
-        # the default); share the artifact and attach the search record
-        cg.autoconfig = result
+        resolved_key = (_fn_key(fn), int(order),
+                        (trace_b,) + tuple(shape[1:]),
+                        dtype, cfg.clamped(trace_b))
+        cg = _CACHE.get(resolved_key)
+        if cg is None:
+            cg = compile_from_graph(g, config=cfg, plan=plan, fn=fn,
+                                    order=order, autoconfig=result)
+            _CACHE[resolved_key] = cg
+        elif cg.autoconfig is None:
+            # the search resolved to a config already compiled explicitly
+            # (e.g. the default); share the artifact and attach the record
+            cg.autoconfig = result
     _CACHE[auto_key] = cg
     if store is not None:
         store.put(cg, request_key=rk)
@@ -898,28 +942,31 @@ def compile_bank(fn, heads, order: int, example_coords, *,
                 return bank
             _STATS["store_misses"] += 1
 
-    per_head = [_trace_filter_graph(fn, h, order, trace_b, shape, dtype)
-                for h in heads]
-    for j, gh in enumerate(per_head):
-        if len(gh.outputs) != 1:
-            raise ValueError(
-                f"bank head {j} traced to {len(gh.outputs)} outputs; each "
-                f"filter head must return exactly one array")
-    from repro.core.graph import merge_graphs
-    from repro.core.passes import optimize
-    merged, _ = merge_graphs(per_head)
-    optimize(merged)        # dedupe_common_subtrees collapses the prefix
+    with TRACER.span("compile.bank", cat="compile", order=order,
+                     heads=len(heads)):
+        per_head = [_trace_filter_graph(fn, h, order, trace_b, shape, dtype)
+                    for h in heads]
+        for j, gh in enumerate(per_head):
+            if len(gh.outputs) != 1:
+                raise ValueError(
+                    f"bank head {j} traced to {len(gh.outputs)} outputs; "
+                    f"each filter head must return exactly one array")
+        from repro.core.graph import merge_graphs
+        from repro.core.passes import optimize
+        with TRACER.span("compile.passes", cat="compile"):
+            merged, _ = merge_graphs(per_head)
+            optimize(merged)    # dedupe_common_subtrees collapses the prefix
 
-    autoconfig = None
-    if auto:
-        from repro.core.autoconfig import resolve_config
-        plan = build_segment_plan(merged)
-        autoconfig = resolve_config(merged, plan, base=base)
-        cfg = autoconfig.config
-        cg = compile_from_graph(merged, config=cfg, plan=plan, order=order,
-                                autoconfig=autoconfig)
-    else:
-        cg = compile_from_graph(merged, config=cfg, order=order)
+        autoconfig = None
+        if auto:
+            from repro.core.autoconfig import resolve_config
+            plan = build_segment_plan(merged)
+            autoconfig = resolve_config(merged, plan, base=base)
+            cfg = autoconfig.config
+            cg = compile_from_graph(merged, config=cfg, plan=plan,
+                                    order=order, autoconfig=autoconfig)
+        else:
+            cg = compile_from_graph(merged, config=cfg, order=order)
 
     bank = CompiledBank(cg, n_heads=len(heads), order=order,
                         report=_bank_report(per_head, merged, cg),

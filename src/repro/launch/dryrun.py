@@ -36,6 +36,9 @@ from repro.distributed.sharding import ShardingPolicy
 from repro.launch import mesh as meshlib
 from repro.launch import steps as steplib
 from repro.models import zoo
+from repro.obs.log import get_logger
+
+_log = get_logger("dryrun")
 
 COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                   "collective-permute")
@@ -292,35 +295,36 @@ def main():
     for arch, shape_name, mp in cells:
         key = (arch, shape_name, mp, args.tag)
         if key in done:
-            print(f"[skip-done] {key}", flush=True)
+            _log.info("skip-done", cell=key)
             continue
         mesh = meshlib.make_production_mesh(multi_pod=mp)
         label = f"{arch} x {shape_name} x {'multi' if mp else 'single'}-pod"
-        print(f"[dryrun] {label} ...", flush=True)
+        _log.info(f"{label} ...")
         try:
             rec, compiled = lower_cell(arch, shape_name, mesh, hp)
             rec["multi_pod"] = mp
             rec["tag"] = args.tag
             if compiled is not None:
                 rec["roofline"] = roofline_terms(rec)
-                print(f"  ok: compile={rec['compile_s']}s "
-                      f"flops/dev={rec['hlo_cost']['flops']:.3e} "
-                      f"coll={rec['hlo_cost']['collective_bytes']:.3e}B "
-                      f"temp={rec['memory'].get('temp_size_in_bytes', 0)/1e9:.1f}GB "
-                      f"dom={rec['roofline']['dominant']}", flush=True)
+                _log.info(
+                    "ok", compile_s=rec["compile_s"],
+                    flops_dev=f"{rec['hlo_cost']['flops']:.3e}",
+                    coll_B=f"{rec['hlo_cost']['collective_bytes']:.3e}",
+                    temp_GB=rec["memory"].get("temp_size_in_bytes", 0) / 1e9,
+                    dom=rec["roofline"]["dominant"])
                 del compiled
             else:
-                print(f"  skipped: {rec['skipped']}", flush=True)
+                _log.info("skipped", reason=rec["skipped"])
         except Exception as e:
             rec = {"arch": arch, "shape": shape_name, "multi_pod": mp,
                    "tag": args.tag, "error": f"{type(e).__name__}: {e}",
                    "traceback": traceback.format_exc()[-2000:]}
-            print(f"  FAIL: {rec['error']}", flush=True)
+            _log.error("FAIL", error=rec["error"])
         results.append(rec)
         with open(args.out, "w") as f:
             json.dump(results, f, indent=1)
     n_err = sum(1 for r in results if "error" in r)
-    print(f"[dryrun] wrote {args.out}: {len(results)} records, {n_err} errors")
+    _log.info(f"wrote {args.out}", records=len(results), errors=n_err)
     return 1 if n_err else 0
 
 

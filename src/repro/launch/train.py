@@ -28,7 +28,10 @@ from repro.distributed.compression import compress_grads, init_error_feedback
 from repro.distributed.fault_tolerance import StepWatchdog
 from repro.distributed.sharding import ShardingPolicy
 from repro.launch import steps as steplib
+from repro.obs.log import get_logger
 from repro.optim import adam
+
+_log = get_logger("train")
 
 
 def make_mesh_if_possible(min_devices: int = 2):
@@ -75,7 +78,7 @@ def train_loop(cfg, shape: ShapeConfig, hp: steplib.HParams, *, steps: int,
             state, _ = ckptlib.restore(state, os.path.join(ckpt_dir, f"step_{last}"))
             start = last
             pipe.load_state_dict({"step": last})
-            print(f"[train] resumed from step {last}")
+            _log.info("resumed", step=last)
 
     wd = StepWatchdog()
     history = []
@@ -88,12 +91,12 @@ def train_loop(cfg, shape: ShapeConfig, hp: steplib.HParams, *, steps: int,
         ev = wd.end_step()
         history.append(float(metrics["loss"]))
         if ev is not None:
-            print(f"[watchdog] straggler step {ev.step}: {ev.duration:.3f}s "
-                  f"({ev.ratio:.1f}x median)")
+            _log.warn("straggler", step=ev.step, duration_s=ev.duration,
+                      ratio=ev.ratio)
         if log_every and step % log_every == 0:
-            print(f"[train] step {step} loss {metrics['loss']:.4f} "
-                  f"gnorm {metrics['grad_norm']:.3f} lr {metrics['lr']:.2e}",
-                  flush=True)
+            _log.info("step", step=step, loss=float(metrics["loss"]),
+                      gnorm=float(metrics["grad_norm"]),
+                      lr=float(metrics["lr"]))
         if ck and ckpt_every and (step + 1) % ckpt_every == 0:
             ck.submit(state, os.path.join(ckpt_dir, f"step_{step + 1}"), step + 1)
     if ck:
@@ -129,8 +132,8 @@ def main():
     _, hist = train_loop(cfg, shape, hp, steps=args.steps,
                          ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
                          seed=args.seed, data_kind=args.data)
-    print(f"[train] {args.steps} steps in {time.time()-t0:.1f}s; "
-          f"loss {hist[0]:.4f} -> {hist[-1]:.4f}")
+    _log.info("done", steps=args.steps, wall_s=time.time() - t0,
+              loss_first=hist[0], loss_last=hist[-1])
 
 
 if __name__ == "__main__":

@@ -54,8 +54,34 @@ from dataclasses import dataclass, field
 import jax
 import jax.numpy as jnp
 
+from repro.obs.metrics import counter as _obs_counter, histogram
+from repro.obs.tracing import TRACER
 from repro.serve.engine import ServingEngine
 from repro.serve.multi_inr import pad_rows
+
+# async-only stats keys layered onto the inherited engine view
+_ASYNC_METRICS = {
+    "submitted": ("serve_submitted", "requests submitted (async)"),
+    "async_chunks": ("serve_async_chunks",
+                     "full single-INR chunks dispatched"),
+    "async_blocks": ("serve_async_blocks", "remainder blocks dispatched"),
+    "async_multi_chunks": ("serve_async_multi_chunks",
+                           "multi-INR chunks dispatched"),
+    "admissions": ("serve_admissions",
+                   "lane admissions at chunk boundaries"),
+    "evictions": ("serve_evictions", "lane evictions at chunk boundaries"),
+    "max_inflight": ("serve_max_inflight", "peak dispatch queue depth"),
+    "host_unpad_s": ("serve_host_unpad_s",
+                     "host time unpadding retired chunks (overlapped)"),
+}
+
+# per-request latency histograms (DESIGN.md §10): queue-wait is the time a
+# dispatched item sat in flight before retirement began; request latency is
+# submit (admission) to the scatter of the request's final row
+_LAT_QUEUE = histogram("serve_queue_wait_latency_s",
+                       "per-item dispatch-to-retire queue wait")
+_LAT_REQ = histogram("serve_request_latency_s",
+                     "per-request submit-to-retire latency")
 
 
 def _is_ready(x) -> bool:
@@ -73,6 +99,7 @@ class _Ticket:
     wid: str
     n: int                                   # rows requested
     filled: int = 0                          # rows scattered so far
+    t_submit: float = 0.0                    # admission time (latency histo)
     # streamed-output position -> [(row offset in ticket, slice), ...]
     parts: dict = field(default_factory=dict)
 
@@ -154,11 +181,9 @@ class AsyncServingEngine(ServingEngine):
         # sig -> lane tuple fixed at the last admission boundary (see _pump)
         self._gen: dict[str, tuple[str, ...]] = {}
         self._queue: deque[_InFlight] = deque()
-        for k in ("submitted", "async_chunks", "async_blocks",
-                  "async_multi_chunks", "admissions", "evictions",
-                  "max_inflight"):
-            self.stats.setdefault(k, 0)
-        self.stats.setdefault("host_unpad_s", 0.0)
+        for k, (name, help) in _ASYNC_METRICS.items():
+            self.stats.with_key(k, _obs_counter(name, help))
+        self.stats.reset()       # async keys start at zero on this label
 
     # -- submission --------------------------------------------------------
 
@@ -169,7 +194,8 @@ class AsyncServingEngine(ServingEngine):
         sig, wid = self._routes[inr_id]
         coords = jnp.asarray(coords)
         ticket = len(self._tickets)
-        self._tickets.append(_Ticket(inr_id, sig, wid, int(coords.shape[0])))
+        self._tickets.append(_Ticket(inr_id, sig, wid, int(coords.shape[0]),
+                                     t_submit=t0))
         self.stats["submitted"] += 1
         self.stats["requests"] += 1
         if coords.shape[0]:
@@ -290,16 +316,22 @@ class AsyncServingEngine(ServingEngine):
 
     def _dispatch_single_chunk(self, sig: str, p: _Pending,
                                chunk_rows: int) -> None:
-        t0 = time.perf_counter()
-        cg = self._artifact(sig)
-        block = cg.config.block
-        coords, scatter = p.take(chunk_rows)
-        xc = coords.reshape(chunk_rows // block, block, *coords.shape[1:])
-        self.stats["host_group_s"] += time.perf_counter() - t0
-        self.stats["async_chunks"] += 1
-        self.stats["rows"] += chunk_rows
-        self._dispatch(_InFlight("chunk", cg.apply_chunk(xc), scatter,
-                                 time.perf_counter(), chunk_rows))
+        with TRACER.span("serve.chunk", cat="serve", sig=sig[:12],
+                         rows=chunk_rows):
+            t0 = time.perf_counter()
+            cg = self._artifact(sig)
+            block = cg.config.block
+            with TRACER.span("serve.pad", cat="serve"):
+                coords, scatter = p.take(chunk_rows)
+                xc = coords.reshape(chunk_rows // block, block,
+                                    *coords.shape[1:])
+            self.stats["host_group_s"] += time.perf_counter() - t0
+            self.stats["async_chunks"] += 1
+            self.stats["rows"] += chunk_rows
+            with TRACER.span("serve.dispatch", cat="serve"):
+                outs = cg.apply_chunk(xc)
+            self._dispatch(_InFlight("chunk", outs, scatter,
+                                     time.perf_counter(), chunk_rows))
 
     def _flush_single(self, sig: str, p: _Pending) -> None:
         """Drain a partial single-INR lane: full blocks through the jitted
@@ -308,46 +340,58 @@ class AsyncServingEngine(ServingEngine):
         cg = self._artifact(sig)
         block = cg.config.block
         while p.rows:
-            t0 = time.perf_counter()
-            n = min(block, p.rows)
-            coords, scatter = p.take(n)
-            self.stats["rows"] += n
-            self.stats["padded_rows"] += block - n
-            if n < block:
-                coords = pad_rows(coords, block)
-            self.stats["host_group_s"] += time.perf_counter() - t0
-            self.stats["async_blocks"] += 1
-            self._dispatch(_InFlight("block", cg.apply_block(coords),
-                                     scatter, time.perf_counter(), n))
+            with TRACER.span("serve.block", cat="serve", sig=sig[:12]):
+                t0 = time.perf_counter()
+                n = min(block, p.rows)
+                with TRACER.span("serve.pad", cat="serve"):
+                    coords, scatter = p.take(n)
+                    if n < block:
+                        coords = pad_rows(coords, block)
+                self.stats["rows"] += n
+                self.stats["padded_rows"] += block - n
+                self.stats["host_group_s"] += time.perf_counter() - t0
+                self.stats["async_blocks"] += 1
+                with TRACER.span("serve.dispatch", cat="serve"):
+                    outs = cg.apply_block(coords)
+                self._dispatch(_InFlight("block", outs, scatter,
+                                         time.perf_counter(), n))
 
     def _dispatch_multi(self, sig: str, lanes, active, nb: int) -> None:
         """One continuous-batching round: a [nb, K, block, ...] chunk whose
         K lanes are the INRs admitted at this boundary."""
-        t0 = time.perf_counter()
-        cg = self._artifact(sig)
-        block = cg.config.block
-        take = nb * block
-        wids = tuple(self._routes[i][1] for i in active)
-        m = self._multi_artifact(sig, wids)
-        cols, scatter = [], []
-        for k, inr_id in enumerate(active):
-            p = lanes[inr_id]
-            n = min(p.rows, take)
-            coords, sc = p.take(n)
-            self.stats["rows"] += n
-            self.stats["padded_rows"] += take - n
-            cols.append(pad_rows(coords, take))
-            scatter.extend((ti, tstart, k, start, count)
-                           for ti, tstart, start, count in sc)
-        batch = jnp.stack(cols)                        # [K, take, ...]
-        xb = jnp.moveaxis(
-            batch.reshape(len(active), nb, block, *batch.shape[2:]), 0, 1)
-        self.stats["host_group_s"] += time.perf_counter() - t0
-        self.stats["async_multi_chunks"] += 1
-        if m.k_sharded:
-            self.stats["k_sharded_batches"] += 1
-        self._dispatch(_InFlight("multi", m.apply_chunk(xb), scatter,
-                                 time.perf_counter(), take * len(active)))
+        with TRACER.span("serve.chunk.multi", cat="serve", sig=sig[:12],
+                         lanes=len(active)):
+            t0 = time.perf_counter()
+            cg = self._artifact(sig)
+            block = cg.config.block
+            take = nb * block
+            wids = tuple(self._routes[i][1] for i in active)
+            m = self._multi_artifact(sig, wids)
+            cols, scatter = [], []
+            for k, inr_id in enumerate(active):
+                p = lanes[inr_id]
+                with TRACER.span("serve.pad", cat="serve", tid=k + 1,
+                                 lane=inr_id):
+                    n = min(p.rows, take)
+                    coords, sc = p.take(n)
+                    cols.append(pad_rows(coords, take))
+                self.stats["rows"] += n
+                self.stats["padded_rows"] += take - n
+                scatter.extend((ti, tstart, k, start, count)
+                               for ti, tstart, start, count in sc)
+            batch = jnp.stack(cols)                    # [K, take, ...]
+            xb = jnp.moveaxis(
+                batch.reshape(len(active), nb, block, *batch.shape[2:]),
+                0, 1)
+            self.stats["host_group_s"] += time.perf_counter() - t0
+            self.stats["async_multi_chunks"] += 1
+            if m.k_sharded:
+                self.stats["k_sharded_batches"] += 1
+            with TRACER.span("serve.dispatch", cat="serve"):
+                outs = m.apply_chunk(xb)
+            self._dispatch(_InFlight("multi", outs, scatter,
+                                     time.perf_counter(),
+                                     take * len(active)))
 
     # -- retirement / assembly ---------------------------------------------
 
@@ -364,8 +408,12 @@ class AsyncServingEngine(ServingEngine):
         chunk, so unpadding retired results overlaps that chunk's device
         execution instead of sitting on the critical path."""
         t0 = time.perf_counter()
-        self.stats["queue_wait_s"] += t0 - item.t_dispatch
-        jax.block_until_ready(item.outs)
+        wait = t0 - item.t_dispatch
+        self.stats["queue_wait_s"] += wait
+        _LAT_QUEUE.observe(wait, engine=self.stats.labels["engine"])
+        with TRACER.span("serve.retire", cat="serve", kind=item.kind,
+                         rows=item.rows):
+            jax.block_until_ready(item.outs)
         self.stats["device_exec_s"] += time.perf_counter() - t0
         self._retired.append(item)
 
@@ -375,8 +423,10 @@ class AsyncServingEngine(ServingEngine):
         if not self._retired:
             return
         t0 = time.perf_counter()
-        while self._retired:
-            self._scatter_item(self._retired.popleft())
+        with TRACER.span("serve.unpad", cat="serve",
+                         items=len(self._retired)):
+            while self._retired:
+                self._scatter_item(self._retired.popleft())
         self.stats["host_unpad_s"] += time.perf_counter() - t0
 
     def _scatter_item(self, item: _InFlight) -> None:
@@ -390,6 +440,7 @@ class AsyncServingEngine(ServingEngine):
                 for o_idx, o in enumerate(flat):
                     t.scatter(o_idx, tstart, o[lane, start:start + count])
                 t.filled += count
+                self._observe_ticket(t)
         else:
             # "chunk": each [nb, block, ...] -> flat rows; "block": already
             # [block, ...]
@@ -401,6 +452,13 @@ class AsyncServingEngine(ServingEngine):
                 for o_idx, o in enumerate(flat):
                     t.scatter(o_idx, tstart, o[start:start + count])
                 t.filled += count
+                self._observe_ticket(t)
+
+    def _observe_ticket(self, t: _Ticket) -> None:
+        """Record submit-to-last-row latency once a ticket fills."""
+        if t.n > 0 and t.filled == t.n and t.t_submit:
+            _LAT_REQ.observe(time.perf_counter() - t.t_submit,
+                             engine=self.stats.labels["engine"])
 
     def _finalize(self, t: _Ticket):
         cg = self._artifact(t.sig)

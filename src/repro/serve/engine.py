@@ -59,6 +59,7 @@ time dispatched work sat in the in-flight queue before retrieval).
 
 from __future__ import annotations
 
+import itertools
 import math
 import time
 from collections import OrderedDict
@@ -66,8 +67,62 @@ from collections import OrderedDict
 import jax
 import jax.numpy as jnp
 
+from repro.obs.metrics import MetricsView, counter as _obs_counter
+from repro.obs.tracing import TRACER
 from repro.serve.multi_inr import MultiINRArtifact, const_payload, pad_rows
 from repro.serve.store import ArtifactStore, as_store
+
+# engine instances get sequential labels ("e0", "e1", ...) so each engine's
+# stats view reads its own timeseries while the fleet aggregates by metric
+_ENGINE_SEQ = itertools.count()
+
+# legacy stats key -> (metric name, help); every engine shares the metrics,
+# distinguished by its ``engine=`` label
+_SERVE_METRICS = {
+    "requests": ("serve_requests", "queries served"),
+    "rows": ("serve_rows", "query rows served (pre-padding)"),
+    "padded_rows": ("serve_padded_rows", "padding rows added"),
+    "groups": ("serve_groups", "signature groups executed"),
+    "multi_groups": ("serve_multi_groups", "multi-INR groups executed"),
+    "bank_groups": ("serve_bank_groups", "filter-bank groups executed"),
+    "restores": ("serve_restores", "artifacts restored from the store"),
+    "sharded_batches": ("serve_sharded_batches",
+                        "batches sharded across the mesh"),
+    "k_sharded_batches": ("serve_k_sharded_batches",
+                          "multi-INR batches K-sharded"),
+    "payload_evictions": ("serve_payload_evictions",
+                          "weight payloads evicted from the LRU"),
+    "multi_evictions": ("serve_multi_evictions",
+                        "multi-INR stacks evicted from the LRU"),
+    "host_group_s": ("serve_host_group_s",
+                     "host time grouping and padding requests"),
+    "device_exec_s": ("serve_device_exec_s",
+                      "time blocked on device execution"),
+    "queue_wait_s": ("serve_queue_wait_s",
+                     "async: time work sat in the in-flight queue"),
+}
+
+
+from repro.obs.metrics import histogram as _obs_histogram
+
+# per-batch serve latency (sync path); the async engine derives queue-wait
+# and admission-to-retire histograms from its own phases
+_LAT_BATCH = _obs_histogram("serve_batch_latency_s",
+                            "wall time of one synchronous serve() batch")
+
+
+def _engine_stats(extra: dict | None = None) -> MetricsView:
+    """One engine instance's stats: a read-through view over the shared
+    serve metrics, labeled by instance (DESIGN.md §10)."""
+    label = f"e{next(_ENGINE_SEQ)}"
+    mapping = {k: _obs_counter(name, help)
+               for k, (name, help) in _SERVE_METRICS.items()}
+    if extra:
+        mapping.update({k: _obs_counter(name, help)
+                        for k, (name, help) in extra.items()})
+    view = MetricsView(mapping, engine=label)
+    view.reset()       # fresh instance starts at zero on its own label
+    return view
 
 
 class _LRU(OrderedDict):
@@ -112,13 +167,10 @@ class ServingEngine:
         self._banks: dict[str, object] = {}             # sig -> BankArtifact
         self._bank_routes: dict[str, tuple[str, int]] = {}  # fid -> (sig, j)
         self._bank_filters: dict[str, tuple[str, ...]] = {}  # sig -> fids
-        self.stats = {"requests": 0, "rows": 0, "padded_rows": 0,
-                      "groups": 0, "multi_groups": 0, "bank_groups": 0,
-                      "restores": 0,
-                      "sharded_batches": 0, "k_sharded_batches": 0,
-                      "payload_evictions": 0, "multi_evictions": 0,
-                      "host_group_s": 0.0, "device_exec_s": 0.0,
-                      "queue_wait_s": 0.0}
+        # registry-backed (repro.obs): same keys and += semantics as the
+        # old plain dict, but the values live on labeled metrics — one
+        # snapshot/export/reset surface for the whole process
+        self.stats = _engine_stats()
 
     # -- registration ------------------------------------------------------
 
@@ -291,7 +343,8 @@ class ServingEngine:
         output tuple per request, in request order.  Synchronous: each
         signature group is grouped, padded, dispatched, and BLOCKED on
         before the next (the baseline the async engine overlaps)."""
-        t0 = time.perf_counter()
+        t_batch = time.perf_counter()
+        t0 = t_batch
         requests = list(requests)
         self.stats["requests"] += len(requests)
         results: list = [None] * len(requests)
@@ -301,45 +354,51 @@ class ServingEngine:
         # filter-bank requests group separately by bank signature
         per_inr: "OrderedDict[str, list]" = OrderedDict()
         bank_groups: "OrderedDict[str, list]" = OrderedDict()
-        for k, (inr_id, coords) in enumerate(requests):
-            if inr_id in self._bank_routes:
-                sig, j = self._bank_routes[inr_id]
-                bank_groups.setdefault(sig, []).append(
-                    (k, j, jnp.asarray(coords)))
-                continue
-            if inr_id not in self._routes:
-                raise KeyError(f"unregistered inr_id {inr_id!r}")
-            per_inr.setdefault(inr_id, []).append(
-                (k, jnp.asarray(coords)))
-        by_sig: "OrderedDict[str, list[str]]" = OrderedDict()
-        for inr_id in per_inr:
-            sig, _ = self._routes[inr_id]
-            by_sig.setdefault(sig, []).append(inr_id)
+        with TRACER.span("serve.group", cat="serve",
+                         requests=len(requests)):
+            for k, (inr_id, coords) in enumerate(requests):
+                if inr_id in self._bank_routes:
+                    sig, j = self._bank_routes[inr_id]
+                    bank_groups.setdefault(sig, []).append(
+                        (k, j, jnp.asarray(coords)))
+                    continue
+                if inr_id not in self._routes:
+                    raise KeyError(f"unregistered inr_id {inr_id!r}")
+                per_inr.setdefault(inr_id, []).append(
+                    (k, jnp.asarray(coords)))
+            by_sig: "OrderedDict[str, list[str]]" = OrderedDict()
+            for inr_id in per_inr:
+                sig, _ = self._routes[inr_id]
+                by_sig.setdefault(sig, []).append(inr_id)
         self.stats["host_group_s"] += time.perf_counter() - t0
 
         for sig, inr_ids in by_sig.items():
             self.stats["groups"] += 1
             t0 = time.perf_counter()
-            coords_per_inr = {
-                i: (jnp.concatenate([c for _, c in per_inr[i]])
-                    if len(per_inr[i]) > 1 else per_inr[i][0][1])
-                for i in inr_ids}
+            with TRACER.span("serve.pad", cat="serve", sig=sig[:12]):
+                coords_per_inr = {
+                    i: (jnp.concatenate([c for _, c in per_inr[i]])
+                        if len(per_inr[i]) > 1 else per_inr[i][0][1])
+                    for i in inr_ids}
             self.stats["host_group_s"] += time.perf_counter() - t0
             t0 = time.perf_counter()
-            if len(inr_ids) == 1:
-                outs = {inr_ids[0]: self._serve_single(
-                    sig, inr_ids[0], coords_per_inr[inr_ids[0]])}
-            else:
-                outs = self._serve_multi(sig, inr_ids, coords_per_inr)
-            jax.block_until_ready(outs)
+            with TRACER.span("serve.dispatch", cat="serve", sig=sig[:12],
+                             inrs=len(inr_ids)):
+                if len(inr_ids) == 1:
+                    outs = {inr_ids[0]: self._serve_single(
+                        sig, inr_ids[0], coords_per_inr[inr_ids[0]])}
+                else:
+                    outs = self._serve_multi(sig, inr_ids, coords_per_inr)
+                jax.block_until_ready(outs)
             self.stats["device_exec_s"] += time.perf_counter() - t0
-            for inr_id in inr_ids:
-                row = 0
-                for k, c in per_inr[inr_id]:
-                    n = c.shape[0]
-                    results[k] = tuple(o[row:row + n]
-                                       for o in outs[inr_id])
-                    row += n
+            with TRACER.span("serve.unpad", cat="serve", sig=sig[:12]):
+                for inr_id in inr_ids:
+                    row = 0
+                    for k, c in per_inr[inr_id]:
+                        n = c.shape[0]
+                        results[k] = tuple(o[row:row + n]
+                                           for o in outs[inr_id])
+                        row += n
 
         # a bank group runs ONE streamed pass of the merged graph over the
         # union of its requests' rows — every filter's output materializes
@@ -349,22 +408,29 @@ class ServingEngine:
             self.stats["groups"] += 1
             self.stats["bank_groups"] += 1
             t0 = time.perf_counter()
-            coords = (jnp.concatenate([c for _, _, c in items])
-                      if len(items) > 1 else items[0][2])
+            with TRACER.span("serve.pad", cat="serve", sig=sig[:12]):
+                coords = (jnp.concatenate([c for _, _, c in items])
+                          if len(items) > 1 else items[0][2])
             self.stats["host_group_s"] += time.perf_counter() - t0
             bank = self._bank(sig)
             self.stats["rows"] += int(coords.shape[0])
             self.stats["padded_rows"] += \
                 (-int(coords.shape[0])) % bank.cg.config.block
             t0 = time.perf_counter()
-            outs = bank.apply_batched(self._place(coords, 0))
-            jax.block_until_ready(outs)
+            with TRACER.span("serve.dispatch", cat="serve", sig=sig[:12],
+                             bank=True):
+                outs = bank.apply_batched(self._place(coords, 0))
+                jax.block_until_ready(outs)
             self.stats["device_exec_s"] += time.perf_counter() - t0
-            row = 0
-            for k, j, c in items:
-                n = int(c.shape[0])
-                results[k] = (outs[j][row:row + n],)
-                row += n
+            with TRACER.span("serve.unpad", cat="serve", sig=sig[:12]):
+                row = 0
+                for k, j, c in items:
+                    n = int(c.shape[0])
+                    results[k] = (outs[j][row:row + n],)
+                    row += n
+        if requests:
+            _LAT_BATCH.observe(time.perf_counter() - t_batch,
+                               engine=self.stats.labels["engine"])
         return results
 
     def _serve_single(self, sig: str, inr_id: str, coords):

@@ -39,6 +39,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import itertools
 import json
 import os
 import re
@@ -50,8 +51,30 @@ import numpy as np
 from repro.checkpoint import ckpt
 from repro.core.config import HardwareConfig
 from repro.core.graph import ComputeGraph
+from repro.obs.metrics import MetricsView, counter as _obs_counter
 
 FORMAT_VERSION = 1
+
+# store phase counters live on the process-global metrics registry (one
+# timeseries per store instance via the ``store=`` label); ``self.stats``
+# stays a dict-shaped read-through view so existing call sites and
+# ``info()`` keep working verbatim
+_STORE_SEQ = itertools.count()
+_STORE_METRICS = {
+    "puts": ("store_puts", "architecture entries written"),
+    "weight_puts": ("store_weight_puts", "weight payloads written"),
+    "loads": ("store_loads", "artifacts restored from disk"),
+    "index_hits": ("store_index_hits", "request-index lookups that hit"),
+    "index_misses": ("store_index_misses", "request-index lookups that missed"),
+}
+
+
+def _store_stats() -> MetricsView:
+    view = MetricsView({k: _obs_counter(name, help)
+                        for k, (name, help) in _STORE_METRICS.items()},
+                       store=f"s{next(_STORE_SEQ)}")
+    view.reset()
+    return view
 
 _ID_RE = re.compile(r"^[A-Za-z0-9][A-Za-z0-9._-]{0,63}$")
 
@@ -336,8 +359,7 @@ class ArtifactStore:
         os.makedirs(self.root, exist_ok=True)
         self._graph_docs: dict[str, dict] = {}     # signature -> graph.json
         self._writer: ckpt.AsyncCheckpointer | None = None
-        self.stats = {"puts": 0, "weight_puts": 0, "loads": 0,
-                      "index_hits": 0, "index_misses": 0}
+        self.stats = _store_stats()
 
     # -- paths -------------------------------------------------------------
 
