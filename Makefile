@@ -2,7 +2,7 @@
 
 PY ?= python
 
-.PHONY: test test-fast serve-smoke async-smoke obs-smoke bench bench-segments bench-regions bench-regions-check bench-bank bench-bank-check bench-pipeline bench-autotune bench-serve bench-obs bench-obs-check bench-json
+.PHONY: test test-fast serve-smoke async-smoke obs-smoke fit-smoke bench bench-segments bench-regions bench-regions-check bench-bank bench-bank-check bench-fit bench-fit-check bench-pipeline bench-autotune bench-serve bench-obs bench-obs-check bench-json
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -18,6 +18,9 @@ async-smoke:
 
 obs-smoke:
 	PYTHONPATH=src $(PY) scripts/obs_smoke.py
+
+fit-smoke:
+	PYTHONPATH=src $(PY) scripts/fit_smoke.py
 
 bench:
 	PYTHONPATH=src $(PY) -m benchmarks.run
@@ -36,6 +39,12 @@ bench-bank:
 
 bench-bank-check:
 	PYTHONPATH=src $(PY) -m benchmarks.run bank --check
+
+bench-fit:
+	PYTHONPATH=src $(PY) -m benchmarks.run fit
+
+bench-fit-check:
+	PYTHONPATH=src $(PY) -m benchmarks.run fit --check
 
 bench-pipeline:
 	PYTHONPATH=src $(PY) -m benchmarks.run pipeline

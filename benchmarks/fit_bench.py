@@ -1,0 +1,219 @@
+"""Streamed fitting engine: peak memory, step latency, gradient parity.
+
+The tentpole claim of the fit pipeline (DESIGN.md §11) is that the loss
+gradient of an order-n objective streams through the SAME block pipeline
+serving uses, with online accumulation — peak fit memory O(block x depth)
+instead of the whole-grid ``jax.grad`` baseline's O(grid) — at no accuracy
+cost and no wall-clock loss at equal step counts.  This benchmark measures
+the seed SIREN at orders 1 (GradMSE) and 2 (LaplacianMSE):
+
+  * PEAK FIT MEMORY, twice: the tracked byte model
+    (``CompiledFit.peak_bytes``) and the LIVE XLA measurement
+    (``compile().memory_analysis().temp_size_in_bytes``) of the streamed
+    value-and-grad vs the whole-grid baseline over the same rows;
+  * GRADIENT PARITY — scaled error (max |a-b| / max(1, max|ref|)) of the
+    streamed gradient vs the whole-grid gradient, gated ≤ 1e-5;
+  * STEP LATENCY of one jitted optimizer step, streamed vs whole-grid;
+  * EQUAL-STEP WEIGHT PARITY — a 5-step streamed fit vs a 5-step
+    whole-grid AdamW loop, final weights gated ≤ 1e-5 scaled.
+
+With ``--json --check`` (``benchmarks/run.py``), the gates are SELF-GATED
+(they bind even before a baseline is committed): both memory ratios must
+stay >= 3x, parity and the equal-step weight error ≤ 1e-5; against
+``results/fit_baseline.json`` the modeled streamed peak additionally must
+not regress.
+"""
+
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+
+# deterministic metrics gated vs the committed baseline (see check())
+GATED_SUFFIXES = ("mem_model_streamed", "parity_scaled")
+MEM_RATIO_FLOOR = 3.0
+PARITY_TOL = 1e-5
+N_ROWS = 1000
+FIT_STEPS = 5
+
+
+def _scaled_err(a_leaves, b_leaves):
+    err = 0.0
+    for a, b in zip(a_leaves, b_leaves):
+        a = np.asarray(a, np.float64)
+        b = np.asarray(b, np.float64)
+        err = max(err, float(np.max(np.abs(a - b)))
+                  / max(1.0, float(np.max(np.abs(b)))))
+    return err
+
+
+def _live_temp_bytes(fn, *args):
+    """XLA's measured scratch high-water mark for one jitted call; None
+    when the backend exposes no memory analysis."""
+    import jax
+    try:
+        ma = jax.jit(fn).lower(*args).compile().memory_analysis()
+        if ma is None:
+            return None
+        return int(ma.temp_size_in_bytes)
+    except Exception:
+        return None
+
+
+def run(hidden: int = 64, layers: int = 2, n: int = N_ROWS,
+        steps: int = FIT_STEPS):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.siren import SirenConfig
+    from repro.core.config import HardwareConfig
+    from repro.fit import GradMSE, LaplacianMSE, compile_fit, fit
+    from repro.inr.gradnet import batched_gradients
+    from repro.inr.siren import siren_fn, siren_init
+    from repro.optim.adam import AdamWConfig, adamw_update, init_opt_state
+
+    scfg = SirenConfig(hidden_features=hidden, hidden_layers=layers)
+    params = siren_init(scfg, jax.random.PRNGKey(0))
+    f = siren_fn(scfg, params)
+    C, D = scfg.out_features, scfg.in_features
+    hw = HardwareConfig(block=8)
+    ex = jax.random.uniform(jax.random.PRNGKey(1), (scfg.batch, D),
+                            jnp.float32, -1, 1)
+    coords = jax.random.uniform(jax.random.PRNGKey(2), (n, D),
+                                jnp.float32, -1, 1)
+
+    def whole_vg(loss, order):
+        """The O(grid) baseline: jax.grad of the mean loss over the full
+        coordinate tensor, derivatives via vmapped jacrev."""
+        def loss_fn(p, targets):
+            grads = batched_gradients(siren_fn(scfg, p), order)(coords)
+            outs = [grads[0]]
+            if order >= 1:
+                outs += [grads[1][:, c] for c in range(C)]
+            if order >= 2:
+                outs += [grads[2][:, c, i]
+                         for c in range(C) for i in range(D)]
+            return jnp.mean(loss.row_loss(tuple(outs), targets, C, D))
+        return jax.value_and_grad(loss_fn)
+
+    for order, loss in ((1, GradMSE()), (2, LaplacianMSE())):
+        tag = f"fit/o{order}"
+        cols = loss.target_cols(C, D)
+        targets = jax.random.normal(jax.random.PRNGKey(3 + order), (n, cols),
+                                    jnp.float32)
+        cf = compile_fit(f, loss, order, ex, params=params, config=hw)
+        lv = cf.leaves_of(params)
+
+        # -- peak memory: the tracked model ---------------------------------
+        model_s = cf.peak_bytes()
+        model_w = cf.peak_bytes(n_rows=n)
+        emit(f"{tag}/mem_model_streamed", model_s,
+             f"modeled peak bytes, O(block x depth); "
+             f"whole-grid={model_w} ({model_w / max(model_s, 1):.1f}x)",
+             bytes=model_s, checkpoints=list(cf.checkpoints))
+        emit(f"{tag}/mem_model_whole", model_w,
+             f"modeled peak bytes of whole-grid jax.grad over {n} rows",
+             bytes=model_w)
+
+        # -- peak memory: the live XLA measurement --------------------------
+        stream_fn = lambda l: cf._stream_vg(l, coords, targets)
+        base_vg = whole_vg(loss, order)
+        live_s = _live_temp_bytes(stream_fn, lv)
+        live_w = _live_temp_bytes(base_vg, params, targets)
+        if live_s is not None and live_w is not None:
+            emit(f"{tag}/mem_live_streamed", live_s,
+                 f"XLA temp bytes; whole-grid={live_w} "
+                 f"({live_w / max(live_s, 1):.1f}x)", bytes=live_s)
+            emit(f"{tag}/mem_live_whole", live_w,
+                 "XLA temp bytes of the whole-grid gradient", bytes=live_w)
+
+        # -- gradient parity ------------------------------------------------
+        l_ref, g_ref = base_vg(params, targets)
+        l_st, g_st = cf.value_and_grad(params, coords, targets)
+        err = _scaled_err(jax.tree_util.tree_leaves(g_st),
+                          jax.tree_util.tree_leaves(g_ref))
+        err = max(err, abs(float(l_st) - float(l_ref))
+                  / max(1.0, abs(float(l_ref))))
+        emit(f"{tag}/parity_scaled", err,
+             f"streamed vs whole-grid gradient over {n} rows; "
+             f"gate <= {PARITY_TOL}", n_rows=n)
+
+        # -- step latency ---------------------------------------------------
+        jit_stream = jax.jit(stream_fn)
+        jit_whole = jax.jit(base_vg)
+        us_s = time_fn(jit_stream, lv)
+        us_w = time_fn(jit_whole, params, targets)
+        emit(f"{tag}/step_latency_streamed", us_s,
+             f"one streamed value-and-grad, {jax.default_backend()}; "
+             f"whole-grid={us_w:.0f}us ({us_w / max(us_s, 1e-9):.2f}x)")
+        emit(f"{tag}/step_latency_whole", us_w,
+             "one whole-grid value-and-grad")
+
+    # -- equal-step weight parity: streamed fit vs whole-grid AdamW loop ---
+    loss = LaplacianMSE()
+    targets = jax.random.normal(jax.random.PRNGKey(5), (n, 1), jnp.float32)
+    cf = compile_fit(f, loss, 2, ex, params=params, config=hw)
+    r = fit(cf, coords, targets, steps=steps)
+    adam = AdamWConfig(total_steps=max(steps, 1), warmup_steps=0,
+                       weight_decay=0.0)
+    base_vg = whole_vg(loss, 2)
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+
+    @jax.jit
+    def base_step(lv, opt, i):
+        p = jax.tree_util.tree_unflatten(treedef, list(lv))
+        val, g = base_vg(p, targets)
+        gl = jax.tree_util.tree_leaves(g)
+        new, opt, _ = adamw_update(adam, list(lv), gl, opt, i)
+        return tuple(new), opt, val
+
+    blv, bopt = tuple(leaves), init_opt_state(leaves)
+    for i in range(steps):
+        blv, bopt, _ = base_step(blv, bopt, i)
+    werr = _scaled_err(jax.tree_util.tree_leaves(r.params), blv)
+    emit("fit/equal_step_weight_err", werr,
+         f"streamed vs whole-grid AdamW, {steps} steps; "
+         f"gate <= {PARITY_TOL}", steps=steps)
+
+
+def check(current: list[dict], baseline: dict) -> list[str]:
+    """Regression gate for ``--check``.  Self-gated (binds with or without
+    a committed baseline): modeled AND live peak memory must stay >= 3x
+    below the whole-grid baseline at every order, gradient parity and the
+    equal-step weight error <= 1e-5.  Against the baseline, the modeled
+    streamed peak and parity must not regress."""
+    cur = {r["name"]: r for r in current}
+    base = {r["name"]: r for r in baseline.get("results", [])}
+    failures = []
+    for kind in ("model", "live"):
+        for order in (1, 2):
+            s = cur.get(f"fit/o{order}/mem_{kind}_streamed")
+            w = cur.get(f"fit/o{order}/mem_{kind}_whole")
+            if s is None or w is None:
+                if kind == "model":
+                    failures.append(f"fit/o{order}: mem_model records missing")
+                continue                   # live: backend may not expose it
+            if w["us_per_call"] < MEM_RATIO_FLOOR * s["us_per_call"]:
+                failures.append(
+                    f"fit/o{order}/mem_{kind}: whole-grid "
+                    f"{w['us_per_call']:.0f} < {MEM_RATIO_FLOOR}x streamed "
+                    f"{s['us_per_call']:.0f} (memory win lost)")
+    for name, rec in cur.items():
+        if name.endswith("parity_scaled") or name == \
+                "fit/equal_step_weight_err":
+            if rec["us_per_call"] > PARITY_TOL:
+                failures.append(f"{name}: {rec['us_per_call']:.2e} > "
+                                f"{PARITY_TOL} (gradient parity lost)")
+    for rec in current:
+        if not any(rec["name"].endswith(s) for s in GATED_SUFFIXES):
+            continue
+        b = base.get(rec["name"])
+        if b is None:
+            continue
+        if rec["us_per_call"] > b["us_per_call"]:
+            failures.append(
+                f"{rec['name']}: {rec['us_per_call']:.3g} regressed vs "
+                f"baseline {b['us_per_call']:.3g}")
+    return failures
+
+
+check.self_gated = True

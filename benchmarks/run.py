@@ -21,11 +21,11 @@ import pathlib
 import sys
 import time
 
-from benchmarks import (autotune_bench, bank_bench, common, higher_order,
-                        kernels_bench, obs_bench, pipeline_bench,
-                        regions_bench, roofline, segments_bench, serve_bench,
-                        table1_latency, table2_parallelism, table3_graphopt,
-                        table4_fifo)
+from benchmarks import (autotune_bench, bank_bench, common, fit_bench,
+                        higher_order, kernels_bench, obs_bench,
+                        pipeline_bench, regions_bench, roofline,
+                        segments_bench, serve_bench, table1_latency,
+                        table2_parallelism, table3_graphopt, table4_fifo)
 
 ALL = {
     "table1": table1_latency.run,
@@ -37,6 +37,7 @@ ALL = {
     "segments": segments_bench.run,
     "regions": regions_bench.run,
     "bank": bank_bench.run,
+    "fit": fit_bench.run,
     "pipeline": pipeline_bench.run,
     "autotune": autotune_bench.run,
     "serve": serve_bench.run,
@@ -49,6 +50,7 @@ DEFAULT = [n for n in ALL if n != "higher_order"]
 CHECKS = {
     "regions": regions_bench.check,
     "bank": bank_bench.check,
+    "fit": fit_bench.check,
     "obs": obs_bench.check,
 }
 

@@ -29,8 +29,10 @@ from repro.core.segment import build_segment_plan
 from repro.core.trace import extract_graph
 from repro.inr.editing import edited_inr, gaussian_blur, train_insp_head
 from repro.inr.encode import encode_inr, image_coords, synthetic_image
+from repro.inr.filters import filter_bank
 from repro.inr.gradnet import compiled_feature_vector
 from repro.inr.siren import siren_fn
+from repro.serve import ServingEngine
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--store", default=None, metavar="DIR",
@@ -83,3 +85,21 @@ out = served(coords).reshape(RES, RES)
 mae = float(jnp.abs(out - target).mean())
 print(f"   edited-vs-blurred MAE over all pixels: {mae:.4f} "
       f"(served {coords.shape[0]} queries via apply_batched)")
+
+print("5) curated filter library: closed-form edits as one served bank ...")
+# the classic edits need no trained head — inr.filters names them as
+# closed-form compositions over the same gradient features, merged by
+# compile_bank into ONE multi-output artifact (shared prefix, DESIGN.md §9)
+names = ["identity", "blur", "edge", "laplacian", "sharpen"]
+# heat-flow time for a 1-pixel Gaussian on a RES grid over [-1, 1]:
+# t = sigma^2 / 2 with sigma = 2 / RES in coordinate units
+alpha = (2.0 / RES) ** 2 / 2.0
+bank = filter_bank(siren_fn(scfg, params), names, coords, alpha=alpha,
+                   config=hw, store=STORE)
+engine = ServingEngine(STORE)
+engine.register_bank(names, bank)
+fouts = engine.serve([(n, coords) for n in names])
+blur_img = fouts[1][0].reshape(RES, RES)
+print(f"   one bank pass served {len(names)} filters "
+      f"({engine.stats['bank_groups']} bank group); closed-form blur vs "
+      f"Gaussian target MAE {float(jnp.abs(blur_img - target).mean()):.4f}")

@@ -14,8 +14,12 @@
 # the obs smoke gates the telemetry layer (traced compile+serve exports
 # valid Perfetto JSON + Prometheus text, drift reports on orders 1-3 keep
 # non-negative FIFO headroom) and the obs check holds telemetry overhead
-# at <=5%; then a fast gate without the slow training tests; then the
-# full suite (including @pytest.mark.slow).
+# at <=5%; the fit smoke gates the streamed fitting engine (loss descends,
+# streamed gradient matches whole-grid jax.grad, fit -> store -> serve
+# round-trips) and the fit check holds the >= 3x streamed-vs-whole-grid
+# peak-memory win and <= 1e-5 gradient/weight parity (vs
+# results/fit_baseline.json); then a fast gate without the slow training
+# tests; then the full suite (including @pytest.mark.slow).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m repro.core.autoconfig
@@ -25,5 +29,7 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.run regions --che
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.run bank --check
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python scripts/obs_smoke.py
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.run obs --check
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python scripts/fit_smoke.py
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.run fit --check
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q -m "not slow" "$@"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

@@ -483,6 +483,7 @@ def clear_compile_cache() -> None:
     from repro.core import executor
     _CACHE.clear()
     _BANK_CACHE.clear()
+    _FIT_CACHE.clear()
     for k in _STATS:
         _STATS[k] = 0
     executor._GRAPH_CACHE.clear()
@@ -799,6 +800,24 @@ class CompiledBank:
 
 
 _BANK_CACHE: dict[tuple, CompiledBank] = {}
+
+# compile_fit artifacts, keyed (CompiledGradient identity, Objective,
+# checkpoint cuts) — the heavy compile half already dedupes through _CACHE /
+# the store, so fit keys ride on the cg object itself (which the entry
+# keeps alive).  Populated by repro.fit.compile; cleared with its siblings.
+_FIT_CACHE: dict[tuple, object] = {}
+
+
+def compile_fit(fn, loss, order: int, example_coords, *, params,
+                config=None, block=None, use_pallas=None, store=None,
+                checkpoints="auto"):
+    """Streamed-fitting front door: ``compile_gradient`` for the heavy half
+    (same three-level cache/store lookup), plus the online loss-gradient
+    program of DESIGN.md §11.  See ``repro.fit.compile.compile_fit``."""
+    from repro.fit.compile import compile_fit as _compile_fit
+    return _compile_fit(fn, loss, order, example_coords, params=params,
+                        config=config, block=block, use_pallas=use_pallas,
+                        store=store, checkpoints=checkpoints)
 
 
 def _trace_filter_graph(fn, head, order: int, trace_b: int, shape,

@@ -669,3 +669,77 @@ def region_row_cost(plan: SegmentPlan, region: FusedRegion,
     return sum(segment_row_cost(plan, plan.segments[sid],
                                 mm_parallel_for(sid))
                for sid in region.segments)
+
+
+# ---------------------------------------------------------------------------
+# gradient checkpoint cuts (the fit path, DESIGN.md §11): score
+# checkpoint-vs-buffer per execution unit with the SAME byte model the VMEM
+# packer uses, so autoconfig and the fit compiler share one cost oracle
+# ---------------------------------------------------------------------------
+
+def unit_act_row_bytes(plan: SegmentPlan, kind: str, unit) -> int:
+    """Per-row bytes of every activation a unit materializes on the forward
+    pass — what reverse-mode autodiff buffers for the backward sweep when
+    the unit is NOT checkpointed."""
+    g = plan.graph
+    if kind == "region":
+        return sum(_row_bytes(g, step[1]) for step in unit.spec.steps)
+    return sum(_row_bytes(g, n) for n in unit.nodes)
+
+
+def unit_boundary_row_bytes(plan: SegmentPlan, kind: str, unit) -> int:
+    """Per-row bytes of a unit's boundary tensors (streamed inputs +
+    outputs) — the ONLY residual a checkpointed unit keeps: the backward
+    sweep recomputes the interior from the boundary."""
+    g = plan.graph
+    if kind == "region":
+        ins, outs = unit.stream_inputs, unit.outputs
+    else:
+        ins, outs = unit.stream_inputs, (unit.output,)
+    return (sum(_row_bytes(g, n) for n in ins)
+            + sum(_row_bytes(g, n) for n in outs))
+
+
+def plan_fit_checkpoints(plan: SegmentPlan, units, config: HardwareConfig,
+                         *, budget: int | None = None) -> tuple[int, ...]:
+    """Choose which execution units RECOMPUTE their interior on the backward
+    sweep (gradient checkpoint cuts) instead of buffering it.
+
+    Greedy under the liveness/VMEM byte model: charge each unit
+    ``block * unit_act_row_bytes`` of backward-sweep buffering; while the
+    total exceeds the budget (default ``config.vmem_budget``), cut the unit
+    with the largest saving (activation bytes minus the boundary residual it
+    must keep anyway).  Deterministic for a given (plan, units, config), so
+    autoconfig can score checkpoint-vs-buffer per region like any other
+    schedule decision.  Returns sorted unit indices."""
+    if budget is None:
+        budget = config.vmem_budget
+    rows = config.block
+    act = [rows * unit_act_row_bytes(plan, kind, u) for kind, u in units]
+    keep = [rows * unit_boundary_row_bytes(plan, kind, u)
+            for kind, u in units]
+    total = sum(act)
+    cuts: list[int] = []
+    for i in sorted(range(len(units)), key=lambda i: keep[i] - act[i]):
+        if total <= budget or act[i] <= keep[i]:
+            break
+        cuts.append(i)
+        total -= act[i] - keep[i]
+    return tuple(sorted(cuts))
+
+
+def fit_backward_bytes(plan: SegmentPlan, units, config: HardwareConfig,
+                       checkpoints=()) -> int:
+    """Modeled backward-sweep buffering of ONE block under the given
+    checkpoint cuts: buffered units charge their full activations,
+    checkpointed units only their boundary residual.  This is the
+    O(block x depth) term of the fit peak-memory model (the ``fit``
+    benchmark's gate tracks it)."""
+    rows = config.block
+    cut = set(checkpoints)
+    total = 0
+    for i, (kind, u) in enumerate(units):
+        per_row = (unit_boundary_row_bytes(plan, kind, u) if i in cut
+                   else unit_act_row_bytes(plan, kind, u))
+        total += rows * per_row
+    return total

@@ -337,3 +337,146 @@ def region_call_stacked(spec: RegionKernelSpec, stream, rows, residents,
     if not isinstance(outs, (list, tuple)):
         outs = (outs,)
     return tuple(o[:, :R] for o in outs)
+
+
+# --------------------------------------------------------------------------
+# fit path: differentiable region call with a VMEM-resident gradient
+# accumulator (DESIGN.md §11)
+# --------------------------------------------------------------------------
+
+def _region_bwd_kernel(*refs, spec: RegionKernelSpec, n_out: int):
+    """Backward megakernel for one region: per row tile, re-run the step
+    program under ``jax.vjp`` and pull the output cotangents back to the
+    region operands.  Per-row cotangents (``d_stream``) are written to their
+    own ``(i, 0)``-mapped tile; per-PARAMETER cotangents (``d_rows`` /
+    ``d_residents``) accumulate into ``(0, ...)``-mapped output refs that
+    stay VMEM-resident across the whole row-tile grid — the xformers
+    online-softmax idiom: the accumulator rides the carry, HBM sees exactly
+    one flush per parameter, never a per-tile partial."""
+    ns = spec.n_stream
+    nb = len(spec.bcast_rows)
+    nr = len(spec.residents)
+    stream_vals = tuple(refs[i][...].astype(jnp.float32) for i in range(ns))
+    row_vals = tuple(refs[ns + j][...].astype(jnp.float32)
+                     for j in range(nb))
+    res_vals = tuple(refs[ns + nb + i][...].astype(jnp.float32)
+                     for i in range(nr))
+    cot_vals = tuple(refs[ns + nb + nr + o][...].astype(jnp.float32)
+                     for o in range(n_out))
+
+    def fwd(stream_t, row_t, res_t):
+        env = dict(zip(spec.stream_inputs, stream_t))
+        env.update(zip(spec.bcast_rows, row_t))
+        res = dict(zip(spec.residents, res_t))
+        _eval_steps(env, res, spec)
+        return tuple(env[o] for o in spec.outputs)
+
+    _, pullback = jax.vjp(fwd, stream_vals, row_vals, res_vals)
+    d_stream, d_rows, d_res = pullback(cot_vals)
+
+    out_refs = refs[ns + nb + nr + n_out:]
+    for j in range(ns):
+        out_refs[j][...] = d_stream[j]
+    first = pl.program_id(0) == 0
+    for j, val in enumerate(tuple(d_rows) + tuple(d_res)):
+        acc_ref = out_refs[ns + j]
+
+        @pl.when(first)
+        def _(acc_ref=acc_ref, val=val):
+            acc_ref[...] = val
+
+        @pl.when(jnp.logical_not(first))
+        def _(acc_ref=acc_ref, val=val):
+            acc_ref[...] += val
+
+
+def _region_bwd_call(spec: RegionKernelSpec, stream, rows, residents, cots, *,
+                     bm: int = 128, interpret: bool | None = None):
+    """Dispatch the backward megakernel.  Padding rows get ZERO cotangents;
+    the vjp is linear in the cotangent, so they contribute exactly zero to
+    every accumulated parameter partial."""
+    if interpret is None:
+        interpret = interpret_default()
+    ns, nb = len(stream), len(rows)
+    R = stream[0].shape[0]
+    br = min(bm, R)
+    pad = (-R) % br
+    if pad:
+        stream = [jnp.pad(a, ((0, pad), (0, 0))) for a in stream]
+        cots = [jnp.pad(c, ((0, pad), (0, 0))) for c in cots]
+    Rp = R + pad
+
+    in_specs = [pl.BlockSpec((br, a.shape[1]), lambda i: (i, 0))
+                for a in stream]
+    in_specs += [pl.BlockSpec((1, a.shape[1]), lambda i: (0, 0))
+                 for a in rows]
+    for r in residents:
+        if r.ndim == 2:
+            in_specs.append(pl.BlockSpec(r.shape, lambda i: (0, 0)))
+        else:
+            in_specs.append(pl.BlockSpec(r.shape, lambda i: (0,)))
+    in_specs += [pl.BlockSpec((br, c.shape[1]), lambda i: (i, 0))
+                 for c in cots]
+
+    out_specs = [pl.BlockSpec((br, a.shape[1]), lambda i: (i, 0))
+                 for a in stream]
+    out_shape = [jax.ShapeDtypeStruct((Rp, a.shape[1]), jnp.float32)
+                 for a in stream]
+    for a in rows:
+        out_specs.append(pl.BlockSpec((1, a.shape[1]), lambda i: (0, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((1, a.shape[1]), jnp.float32))
+    for r in residents:
+        if r.ndim == 2:
+            out_specs.append(pl.BlockSpec(r.shape, lambda i: (0, 0)))
+        else:
+            out_specs.append(pl.BlockSpec(r.shape, lambda i: (0,)))
+        out_shape.append(jax.ShapeDtypeStruct(r.shape, jnp.float32))
+
+    outs = pl.pallas_call(
+        functools.partial(_region_bwd_kernel, spec=spec, n_out=len(cots)),
+        grid=(Rp // br,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(*stream, *rows, *residents, *cots)
+    if not isinstance(outs, (list, tuple)):
+        outs = (outs,)
+    d_stream = tuple(o[:R] for o in outs[:ns])
+    d_rows = tuple(outs[ns:ns + nb])
+    d_res = tuple(outs[ns + nb:])
+    return d_stream, d_rows, d_res
+
+
+@functools.lru_cache(maxsize=None)
+def region_grad_fn(spec: RegionKernelSpec, out_info: tuple, bm: int = 128,
+                   interpret: bool | None = None):
+    """Differentiable region call for the streamed fitting path.
+
+    Returns a cached ``jax.custom_vjp`` callable over the flat operand tuple
+    ``(*stream, *rows, *residents)``: the forward pass IS ``region_call``
+    (bit-identical to serving), and the backward pass is ONE accumulating
+    Pallas kernel (``_region_bwd_kernel``) that streams the same row tiles
+    and keeps every per-parameter gradient partial in VMEM across the grid —
+    one HBM flush per parameter per region call, instead of materializing a
+    per-tile gradient tensor and reducing it afterwards."""
+    ns = len(spec.stream_inputs)
+    nb = len(spec.bcast_rows)
+
+    @jax.custom_vjp
+    def call(*ops):
+        return region_call(spec, ops[:ns], ops[ns:ns + nb], ops[ns + nb:],
+                           out_info, bm=bm, interpret=interpret)
+
+    def call_fwd(*ops):
+        return call(*ops), ops
+
+    def call_bwd(ops, cots):
+        d_stream, d_rows, d_res = _region_bwd_call(
+            spec, list(ops[:ns]), list(ops[ns:ns + nb]),
+            list(ops[ns + nb:]), list(cots), bm=bm, interpret=interpret)
+        flat = d_stream + d_rows + d_res
+        return tuple(d.astype(o.dtype) for d, o in zip(flat, ops))
+
+    call.defvjp(call_fwd, call_bwd)
+    return call

@@ -100,6 +100,7 @@ class _Ticket:
     n: int                                   # rows requested
     filled: int = 0                          # rows scattered so far
     t_submit: float = 0.0                    # admission time (latency histo)
+    bank_j: int = -1                         # bank output index (-1: not bank)
     # streamed-output position -> [(row offset in ticket, slice), ...]
     parts: dict = field(default_factory=dict)
 
@@ -178,6 +179,10 @@ class AsyncServingEngine(ServingEngine):
         # sig -> OrderedDict[inr_id -> _Pending]  (admission queues)
         self._pending: "OrderedDict[str, OrderedDict[str, _Pending]]" = \
             OrderedDict()
+        # bank sig -> _Pending: ONE lane per bank — filter requests of one
+        # bank share the merged graph, so their rows coalesce into a single
+        # concatenated pass per admission boundary (sync-path grouping)
+        self._bank_pending: "OrderedDict[str, _Pending]" = OrderedDict()
         # sig -> lane tuple fixed at the last admission boundary (see _pump)
         self._gen: dict[str, tuple[str, ...]] = {}
         self._queue: deque[_InFlight] = deque()
@@ -189,6 +194,8 @@ class AsyncServingEngine(ServingEngine):
 
     def _enqueue(self, inr_id: str, coords) -> int:
         t0 = time.perf_counter()
+        if inr_id in self._bank_routes:
+            return self._enqueue_bank(inr_id, coords, t0)
         if inr_id not in self._routes:
             raise KeyError(f"unregistered inr_id {inr_id!r}")
         sig, wid = self._routes[inr_id]
@@ -204,6 +211,25 @@ class AsyncServingEngine(ServingEngine):
                 lanes[inr_id] = _Pending()
                 self.stats["admissions"] += 1
             lanes[inr_id].push(ticket, coords)
+        self.stats["host_group_s"] += time.perf_counter() - t0
+        return ticket
+
+    def _enqueue_bank(self, fid: str, coords, t0: float) -> int:
+        """Queue a filter-bank request: all filters of one bank share a
+        single pending lane — their rows run as ONE concatenated pass of
+        the merged graph at the next admission boundary."""
+        sig, j = self._bank_routes[fid]
+        coords = jnp.asarray(coords)
+        ticket = len(self._tickets)
+        self._tickets.append(_Ticket(fid, sig, "", int(coords.shape[0]),
+                                     t_submit=t0, bank_j=j))
+        self.stats["submitted"] += 1
+        self.stats["requests"] += 1
+        if coords.shape[0]:
+            if sig not in self._bank_pending:
+                self._bank_pending[sig] = _Pending()
+                self.stats["admissions"] += 1
+            self._bank_pending[sig].push(ticket, coords)
         self.stats["host_group_s"] += time.perf_counter() - t0
         return ticket
 
@@ -244,8 +270,9 @@ class AsyncServingEngine(ServingEngine):
         return out
 
     def pending_rows(self) -> int:
-        return sum(p.rows for lanes in self._pending.values()
-                   for p in lanes.values())
+        return (sum(p.rows for lanes in self._pending.values()
+                    for p in lanes.values())
+                + sum(p.rows for p in self._bank_pending.values()))
 
     # -- the admission pump ------------------------------------------------
 
@@ -301,6 +328,22 @@ class AsyncServingEngine(ServingEngine):
                         self._dispatch_multi(sig, lanes, gen, nb)
                     else:
                         break
+        self._pump_banks(flush=flush)
+
+    def _pump_banks(self, *, flush: bool) -> None:
+        """Dispatch bank lanes whose pending rows fill a chunk (or on
+        flush): the whole lane goes out as ONE concatenated pass of the
+        merged graph — the sync path's per-signature bank grouping, so the
+        ``bank_groups`` counter advances identically."""
+        for sig in list(self._bank_pending):
+            p = self._bank_pending[sig]
+            bank = self._bank(sig)
+            chunk_rows = bank.cg.config.chunk_blocks * bank.cg.config.block
+            if p.rows and (p.rows >= chunk_rows or flush):
+                self._dispatch_bank(sig, p)
+            if p.rows == 0:
+                self.stats["evictions"] += 1
+                del self._bank_pending[sig]
 
     # -- dispatch ----------------------------------------------------------
 
@@ -393,6 +436,26 @@ class AsyncServingEngine(ServingEngine):
                                      time.perf_counter(),
                                      take * len(active)))
 
+    def _dispatch_bank(self, sig: str, p: _Pending) -> None:
+        """One concatenated bank pass: every pending filter request of the
+        bank rides one streamed execution of the merged multi-output graph
+        (request k for filter j later reads its row slice of output j)."""
+        with TRACER.span("serve.chunk.bank", cat="serve", sig=sig[:12],
+                         rows=p.rows):
+            t0 = time.perf_counter()
+            bank = self._bank(sig)
+            n = p.rows
+            with TRACER.span("serve.pad", cat="serve"):
+                coords, scatter = p.take(n)
+            self.stats["host_group_s"] += time.perf_counter() - t0
+            self.stats["bank_groups"] += 1
+            self.stats["rows"] += n
+            self.stats["padded_rows"] += (-n) % bank.cg.config.block
+            with TRACER.span("serve.dispatch", cat="serve", bank=True):
+                outs = bank.apply_batched(self._place(coords, 0))
+            self._dispatch(_InFlight("bank", outs, scatter,
+                                     time.perf_counter(), n))
+
     # -- retirement / assembly ---------------------------------------------
 
     def _poll(self) -> None:
@@ -441,6 +504,15 @@ class AsyncServingEngine(ServingEngine):
                     t.scatter(o_idx, tstart, o[lane, start:start + count])
                 t.filled += count
                 self._observe_ticket(t)
+        elif item.kind == "bank":
+            # outs: one [N, ...] array per bank output, already row-flat;
+            # each ticket reads only ITS filter's output
+            for ti, tstart, start, count in item.scatter:
+                t = self._tickets[ti]
+                t.scatter(0, tstart,
+                          item.outs[t.bank_j][start:start + count])
+                t.filled += count
+                self._observe_ticket(t)
         else:
             # "chunk": each [nb, block, ...] -> flat rows; "block": already
             # [block, ...]
@@ -461,6 +533,8 @@ class AsyncServingEngine(ServingEngine):
                              engine=self.stats.labels["engine"])
 
     def _finalize(self, t: _Ticket):
+        if t.bank_j >= 0:
+            return self._finalize_bank(t)
         cg = self._artifact(t.sig)
         if t.filled != t.n:
             raise RuntimeError(f"ticket for {t.inr_id!r} assembled "
@@ -482,6 +556,20 @@ class AsyncServingEngine(ServingEngine):
                             else jnp.concatenate(cols))
             s_idx += 1
         return tuple(outs)
+
+    def _finalize_bank(self, t: _Ticket):
+        """A bank ticket returns a 1-tuple: its filter's output rows (the
+        sync path's ``(outs[j][row:row+n],)`` shape)."""
+        if t.filled != t.n:
+            raise RuntimeError(f"ticket for {t.inr_id!r} assembled "
+                               f"{t.filled}/{t.n} rows")
+        if t.n == 0:
+            g = self._bank(t.sig).cg.graph
+            node = g.nodes[g.outputs[t.bank_j]]
+            return (jnp.zeros((0,) + tuple(node.shape[1:]), node.dtype),)
+        parts = sorted(t.parts[0], key=lambda p: p[0])
+        cols = [v for _, v in parts]
+        return (cols[0] if len(cols) == 1 else jnp.concatenate(cols),)
 
     def _resident_out(self, t: _Ticket, o: int):
         """Resident (const-derived) outputs depend on the weight set, not

@@ -146,9 +146,41 @@ class _LRU(OrderedDict):
         evicted = 0
         if evictable:
             while len(self) > self.cap:
-                self.popitem(last=False)
+                self._evict_one()
                 evicted += 1
         return evicted
+
+    def _evict_one(self) -> None:
+        self.popitem(last=False)
+
+
+class _FreqCache(_LRU):
+    """Frequency-ranked retention for the warm weight set: every ``get``
+    hit bumps a per-key hit count, and eviction removes the key with the
+    FEWEST hits (ties broken least-recently-used) instead of pure recency.
+    A scan over many cold INRs can no longer flush the handful of hot
+    payloads that serve most requests."""
+
+    def __init__(self, cap: int):
+        super().__init__(cap)
+        self.hits: dict = {}
+
+    def get(self, key, default=None):
+        v = super().get(key, default)
+        if key in self:
+            self.hits[key] = self.hits.get(key, 0) + 1
+        return v
+
+    def put(self, key, value, *, evictable: bool = True) -> int:
+        self.hits.setdefault(key, 0)
+        return super().put(key, value, evictable=evictable)
+
+    def _evict_one(self) -> None:
+        # iteration order is recency (oldest first), so min() lands on the
+        # least-recently-used key among those with the fewest hits
+        victim = min(self, key=lambda k: self.hits.get(k, 0))
+        del self[victim]
+        self.hits.pop(victim, None)
 
 
 class ServingEngine:
@@ -162,7 +194,7 @@ class ServingEngine:
         self._artifacts: dict[str, object] = {}         # sig -> CompiledGradient
         self._base_wid: dict[str, str] = {}             # sig -> base weight id
         self._variants: dict[tuple, object] = {}        # (sig, n_dev) -> variant
-        self._payloads: _LRU = _LRU(payload_cache)      # (sig, wid) -> payload
+        self._payloads: _FreqCache = _FreqCache(payload_cache)  # (sig, wid)
         self._multi: _LRU = _LRU(multi_cache)           # (sig, wids) -> stack
         self._banks: dict[str, object] = {}             # sig -> BankArtifact
         self._bank_routes: dict[str, tuple[str, int]] = {}  # fid -> (sig, j)
@@ -170,7 +202,10 @@ class ServingEngine:
         # registry-backed (repro.obs): same keys and += semantics as the
         # old plain dict, but the values live on labeled metrics — one
         # snapshot/export/reset surface for the whole process
-        self.stats = _engine_stats()
+        self.stats = _engine_stats(extra={
+            "warm_hits": ("serve_warm_hits",
+                          "payload hits in the frequency-ranked warm cache"),
+        })
 
     # -- registration ------------------------------------------------------
 
@@ -270,7 +305,9 @@ class ServingEngine:
 
     def _payload(self, sig: str, wid: str) -> dict:
         p = self._payloads.get((sig, wid))
-        if p is None:
+        if p is not None:
+            self.stats["warm_hits"] += 1
+        else:
             if self.store is None:
                 raise KeyError(f"unknown weights {wid!r} and no store")
             p = self.store.load_weights(sig, wid)

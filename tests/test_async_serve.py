@@ -368,3 +368,72 @@ def test_auto_config_under_sharded_mesh(fleet):
     with pytest.raises(ValueError):
         P.compile_gradient(f, 1, x,
                            base_config=DEFAULT_CONFIG.replace(n_shards=2))
+
+
+# ---------------------------------------------------------------------------
+# bank-aware request batching (ISSUE-10 satellite)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def bank_setup():
+    from repro.configs.siren import InspConfig
+    from repro.inr.gradnet import num_features
+    from repro.inr.insp import insp_head, insp_init
+
+    cfg = SirenConfig(hidden_features=16, hidden_layers=1)
+    f = siren_fn(cfg, siren_init(cfg, jax.random.PRNGKey(0)))
+    x = jax.random.uniform(jax.random.PRNGKey(1),
+                           (16, cfg.in_features), jnp.float32, -1, 1)
+    icfg = InspConfig(hidden=8, layers=2, grad_order=1)
+    nf = num_features(cfg.in_features, cfg.out_features, 1)
+    heads = [insp_head(insp_init(icfg, nf, 1, jax.random.PRNGKey(i + 1)))
+             for i in range(3)]
+    bank = P.compile_bank(f, heads, 1, x, config=HW)
+    cg = P.compile_gradient(f, 1, x, config=HW)
+    return cfg, bank, cg
+
+
+def test_async_bank_parity_and_group_counter(bank_setup):
+    """Filter requests of one bank coalesce into ONE concatenated pass per
+    admission boundary — results bit-identical to the sync path, and the
+    bank_groups counter advances in lockstep with it."""
+    cfg, bank, cg = bank_setup
+
+    def build(engine):
+        engine.register("inr", cg)
+        engine.register_bank(["fa", "fb", "fc"], bank)
+        return engine
+
+    def q(n, seed):
+        return jax.random.uniform(jax.random.PRNGKey(seed),
+                                  (n, cfg.in_features), jnp.float32, -1, 1)
+
+    reqs = [("fa", q(13, 2)), ("inr", q(9, 3)), ("fb", q(21, 4)),
+            ("fa", q(5, 5)), ("fc", q(0, 6))]
+    sync = build(ServingEngine())
+    want = sync.serve(reqs)
+    asy = build(AsyncServingEngine())
+    got = asy.serve_async(reqs)
+    _assert_bit_identical(want, got)
+    assert asy.stats["bank_groups"] == sync.stats["bank_groups"] == 1
+    assert asy.pending_rows() == 0
+
+
+def test_async_bank_chunk_dispatch_before_drain(bank_setup):
+    """A bank lane that fills a serving chunk dispatches at submit time
+    (the double-buffered path), not only at drain."""
+    cfg, bank, cg = bank_setup
+    asy = AsyncServingEngine()
+    asy.register_bank(["fa", "fb", "fc"], bank)
+    chunk_rows = bank.cg.config.chunk_blocks * bank.cg.config.block
+    q = jax.random.uniform(jax.random.PRNGKey(7),
+                           (chunk_rows, cfg.in_features), jnp.float32, -1, 1)
+    asy.submit("fa", q)
+    assert asy.stats["bank_groups"] == 1        # dispatched pre-drain
+    asy.submit("fb", q[:7])
+    res = asy.drain()
+    assert asy.stats["bank_groups"] == 2
+    sync = ServingEngine()
+    sync.register_bank(["fa", "fb", "fc"], bank)
+    want = sync.serve([("fa", q), ("fb", q[:7])])
+    _assert_bit_identical(want, res)

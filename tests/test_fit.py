@@ -1,0 +1,290 @@
+"""Streamed fitting engine (DESIGN.md §11).
+
+Covers the ISSUE-10 acceptance surface: streamed loss gradients match a
+whole-grid ``jax.grad`` baseline at orders 1-2 on non-block-multiple grids
+(scaled ≤ 1e-5), the checkpoint-cut invariance contract (per-unit backward
+bitwise vs plain autodiff, forward loss bitwise cut-vs-buffer, whole-fit
+gradients ≤ 1e-6 scaled), the Pallas region path against the interpreter
+path, K-batched fitting against K sequential fits, the compile-fit cache,
+the memory model's ≥ 3x streamed-vs-whole-grid claim, and the
+fit -> put_weights -> serve round-trip.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.siren import SirenConfig
+from repro.core import pipeline as P
+from repro.core.config import HardwareConfig
+from repro.fit import (GradMSE, LaplacianMSE, ValueMSE, compile_fit, fit,
+                       fit_many)
+from repro.fit import compile as FC
+from repro.inr.gradnet import batched_gradients
+from repro.inr.siren import siren_apply, siren_fn, siren_init
+from repro.serve import ArtifactStore, ServingEngine
+
+CFG = HardwareConfig(block=8)
+CFG_PALLAS = HardwareConfig(block=8, use_pallas=True, fuse_regions=True)
+
+
+@pytest.fixture(autouse=True)
+def fresh_cache():
+    P.clear_compile_cache()
+    yield
+    P.clear_compile_cache()
+
+
+@pytest.fixture(scope="module")
+def siren():
+    cfg = SirenConfig(hidden_features=32, hidden_layers=2)
+    params = siren_init(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _coords(n, d=2, seed=0):
+    return jnp.asarray(
+        np.random.RandomState(seed).uniform(-1, 1, (n, d)), jnp.float32)
+
+
+def _targets(loss, C, D, n, seed=1):
+    cols = loss.target_cols(C, D)
+    return jnp.asarray(
+        np.random.RandomState(seed).standard_normal((n, cols)), jnp.float32)
+
+
+def _scaled_err(a, b):
+    """max |a-b| over max(1, max|b|): few-ulp reassociation on gradients of
+    magnitude ~1e3 is the float32 floor, not an error."""
+    a = np.asarray(a, np.float64)
+    b = np.asarray(b, np.float64)
+    return float(np.max(np.abs(a - b))) / max(1.0, float(np.max(np.abs(b))))
+
+
+def _whole_grid_ref(scfg, params, loss, order, coords, targets):
+    """The O(grid) baseline: jax.grad of the mean masked loss over the FULL
+    coordinate tensor, derivatives via plain vmapped jacrev — no streaming,
+    no block pipeline, every activation buffered."""
+    C, D = scfg.out_features, scfg.in_features
+
+    def loss_fn(p):
+        outs_nested = batched_gradients(siren_fn(scfg, p), order)(coords)
+        outs = [outs_nested[0]]
+        if order >= 1:
+            for c in range(C):
+                outs.append(outs_nested[1][:, c])
+        if order >= 2:
+            for c in range(C):
+                for i in range(D):
+                    outs.append(outs_nested[2][:, c, i])
+        return jnp.mean(loss.row_loss(tuple(outs), targets, C, D))
+
+    return jax.value_and_grad(loss_fn)(params)
+
+
+# ---------------------------------------------------------------------------
+# parity: streamed == whole-grid at orders 1-2, non-block-multiple grids
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("order,loss", [(1, GradMSE()), (2, LaplacianMSE())])
+def test_stream_parity_vs_whole_grid(siren, order, loss):
+    scfg, params = siren
+    coords = _coords(100, seed=order)      # 100 rows: not a multiple of 8
+    targets = _targets(loss, scfg.out_features, scfg.in_features, 100)
+    cf = compile_fit(siren_fn(scfg, params), loss, order, _coords(64),
+                     params=params, config=CFG)
+    l_ref, g_ref = _whole_grid_ref(scfg, params, loss, order, coords, targets)
+    l_st, g_st = cf.value_and_grad(params, coords, targets)
+    assert abs(float(l_st) - float(l_ref)) <= 1e-5 * max(1.0, abs(float(l_ref)))
+    for a, b in zip(jax.tree_util.tree_leaves(g_st),
+                    jax.tree_util.tree_leaves(g_ref)):
+        assert _scaled_err(a, b) <= 1e-5
+
+
+def test_pallas_path_matches_interpreter(siren):
+    scfg, params = siren
+    loss = LaplacianMSE()
+    coords = _coords(52, seed=7)
+    targets = _targets(loss, scfg.out_features, scfg.in_features, 52)
+    f = siren_fn(scfg, params)
+    cf_i = compile_fit(f, loss, 2, _coords(64), params=params, config=CFG)
+    cf_p = compile_fit(f, loss, 2, _coords(64), params=params,
+                       config=CFG_PALLAS)
+    # the Pallas artifact fuses into region units — a genuinely different
+    # execution path, not a config alias
+    assert any(k == "region" for k, _ in FC._fit_units(cf_p.cg))
+    li, gi = cf_i.value_and_grad(params, coords, targets)
+    lp, gp = cf_p.value_and_grad(params, coords, targets)
+    assert abs(float(lp) - float(li)) <= 1e-5 * max(1.0, abs(float(li)))
+    for a, b in zip(jax.tree_util.tree_leaves(gp),
+                    jax.tree_util.tree_leaves(gi)):
+        assert _scaled_err(a, b) <= 1e-5
+
+
+# ---------------------------------------------------------------------------
+# checkpoint cuts: the invariance contract
+# ---------------------------------------------------------------------------
+
+def test_checkpointed_unit_backward_bitwise(siren):
+    """Per-unit contract: a cut unit's backward — the custom-vjp recompute
+    wrapper — is BITWISE the plain-autodiff backward of the same unit, for
+    every unit of the artifact."""
+    scfg, params = siren
+    loss = GradMSE()
+    cf = compile_fit(siren_fn(scfg, params), loss, 1, _coords(64),
+                     params=params, config=CFG, checkpoints="none")
+    units = FC._fit_units(cf.cg)
+    leaves = cf.leaves_of(params)
+    res_env = cf._res_env(leaves)
+    xb, _, _, _ = cf._blocked(_coords(24, seed=3),
+                              _targets(loss, 1, 2, 24))
+    g = cf.cg.graph
+    env = {g.nodes[i].id: xb[0] for i in cf.cg.plan.inputs}
+    rng = np.random.RandomState(0)
+    for kind, u in units:
+        fnu = (FC._region_unit_fn(cf.cg, u) if kind == "region"
+               else FC._segment_unit_fn(cf.cg, u))
+        sub = {nid: env[nid] for nid in u.stream_inputs if nid in env}
+        out_plain, pb_plain = jax.vjp(fnu, res_env, sub)
+        out_cut, pb_cut = jax.vjp(FC._checkpointed(fnu), res_env, sub)
+        ct = {k: jnp.asarray(rng.standard_normal(v.shape), v.dtype)
+              for k, v in out_plain.items()}
+        for k in out_plain:
+            np.testing.assert_array_equal(np.asarray(out_plain[k]),
+                                          np.asarray(out_cut[k]))
+        for a, b in zip(jax.tree_util.tree_leaves(pb_plain(ct)),
+                        jax.tree_util.tree_leaves(pb_cut(ct))):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        env.update(out_plain)
+
+
+def test_checkpoint_cuts_forward_bitwise_grads_tight(siren):
+    """Whole-fit contract: cutting every unit leaves the FORWARD loss
+    bitwise unchanged (recompute never touches the forward pass), and the
+    gradients within 1e-6 scaled — the XLA-reassociation floor between
+    structurally different backward programs, an order tighter than the
+    streamed-vs-whole-grid gate."""
+    scfg, params = siren
+    loss = LaplacianMSE()
+    coords = _coords(40, seed=5)
+    targets = _targets(loss, scfg.out_features, scfg.in_features, 40)
+    f = siren_fn(scfg, params)
+    cf0 = compile_fit(f, loss, 2, _coords(64), params=params, config=CFG,
+                      checkpoints="none")
+    cf1 = compile_fit(f, loss, 2, _coords(64), params=params, config=CFG,
+                      checkpoints="all")
+    assert cf0 is not cf1                   # distinct cache entries
+    l0, g0 = cf0.value_and_grad(params, coords, targets)
+    l1, g1 = cf1.value_and_grad(params, coords, targets)
+    assert float(l0) == float(l1)           # forward: bitwise
+    for a, b in zip(jax.tree_util.tree_leaves(g1),
+                    jax.tree_util.tree_leaves(g0)):
+        assert _scaled_err(a, b) <= 1e-6
+
+
+def test_checkpoint_cuts_shrink_modeled_backward(siren):
+    """Cutting the units the byte model flags (interior > boundary) shrinks
+    the modeled backward footprint; a cut of a boundary-heavy unit would
+    GROW it, which is exactly why the planner is selective."""
+    from repro.core.regions import (unit_act_row_bytes,
+                                    unit_boundary_row_bytes)
+    scfg, params = siren
+    f = siren_fn(scfg, params)
+    cf0 = compile_fit(f, ValueMSE(), 2, _coords(64), params=params,
+                      config=CFG, checkpoints="none")
+    units = FC._fit_units(cf0.cg)
+    wins = tuple(i for i, (k, u) in enumerate(units)
+                 if unit_act_row_bytes(cf0.cg.plan, k, u)
+                 > unit_boundary_row_bytes(cf0.cg.plan, k, u))
+    assert wins                 # an order-2 pipeline has heavy interiors
+    cf1 = compile_fit(f, ValueMSE(), 2, _coords(64), params=params,
+                      config=CFG, checkpoints=wins)
+    assert cf1.peak_bytes() < cf0.peak_bytes()
+
+
+# ---------------------------------------------------------------------------
+# the memory model: streamed O(block x depth) vs whole-grid O(grid)
+# ---------------------------------------------------------------------------
+
+def test_peak_model_streamed_vs_whole_grid(siren):
+    scfg, params = siren
+    cf = compile_fit(siren_fn(scfg, params), LaplacianMSE(), 2, _coords(64),
+                     params=params, config=CFG)
+    n = 64 * 64                             # the seed SIREN's image grid
+    assert cf.peak_bytes(n_rows=n) >= 3 * cf.peak_bytes()
+
+
+# ---------------------------------------------------------------------------
+# the front door: cache + validation
+# ---------------------------------------------------------------------------
+
+def test_compile_fit_cache_hit(siren):
+    scfg, params = siren
+    f = siren_fn(scfg, params)
+    a = compile_fit(f, ValueMSE(), 1, _coords(64), params=params, config=CFG)
+    b = compile_fit(f, ValueMSE(), 1, _coords(64), params=params, config=CFG)
+    assert a is b
+    c = compile_fit(f, GradMSE(), 1, _coords(64), params=params, config=CFG)
+    assert c is not a                       # objective keys the cache
+
+
+def test_order_must_cover_objective(siren):
+    scfg, params = siren
+    with pytest.raises(ValueError, match="order"):
+        compile_fit(siren_fn(scfg, params), LaplacianMSE(), 1, _coords(64),
+                    params=params, config=CFG)
+
+
+# ---------------------------------------------------------------------------
+# the engine: loss descends, K-batched == sequential, fit -> store -> serve
+# ---------------------------------------------------------------------------
+
+def test_fit_reduces_loss_and_serves(siren, tmp_path):
+    scfg, params = siren
+    store = ArtifactStore(tmp_path / "store")
+    coords = _coords(100, seed=9)
+    target = jnp.tanh(3.0 * coords[:, :1])
+    cf = compile_fit(siren_fn(scfg, params), ValueMSE(), 1, _coords(64),
+                     params=params, config=CFG, store=store)
+    r = fit(cf, coords, target, steps=8, store=store, inr_id="fitted")
+    assert r.losses[-1] < r.losses[0]
+    assert store.has(cf.signature, "fitted")
+
+    # the fitted payload serves through the ordinary engine: outs[0] is the
+    # fitted INR's value channel
+    eng = ServingEngine(store)
+    eng.register("fitted", signature=cf.signature, weight_id="fitted")
+    (outs,) = eng.serve([("fitted", coords)])
+    ref = siren_apply(r.params, coords)
+    np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(ref),
+                               atol=1e-5)
+
+
+def test_fit_many_matches_sequential(siren):
+    scfg, params = siren
+    K, steps = 3, 5
+    coords = _coords(64, seed=11)
+    params_k = [siren_init(scfg, jax.random.PRNGKey(10 + k))
+                for k in range(K)]
+    targets_k = [jnp.tanh((k + 1.0) * coords[:, :1]) for k in range(K)]
+    cf = compile_fit(siren_fn(scfg, params), ValueMSE(), 1, _coords(64),
+                     params=params, config=CFG)
+    many = fit_many(cf, params_k, coords, targets_k, steps=steps)
+    for k in range(K):
+        solo = fit(cf, coords, targets_k[k], steps=steps, params=params_k[k])
+        for a, b in zip(jax.tree_util.tree_leaves(many[k].params),
+                        jax.tree_util.tree_leaves(solo.params)):
+            assert _scaled_err(a, b) <= 1e-5
+        np.testing.assert_allclose(many[k].losses, solo.losses, rtol=1e-5)
+
+
+def test_fit_batched_chunks_descend(siren):
+    """The shuffled-chunk path: smaller-than-grid steps still descend."""
+    scfg, params = siren
+    coords = _coords(96, seed=13)
+    target = jnp.tanh(2.0 * coords[:, :1])
+    cf = compile_fit(siren_fn(scfg, params), ValueMSE(), 1, _coords(64),
+                     params=params, config=CFG)
+    r = fit(cf, coords, target, steps=10, batch_rows=32)
+    assert min(r.losses[-3:]) < r.losses[0]

@@ -386,3 +386,45 @@ def test_fresh_subprocess_restores_without_tracing():
     assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
     assert "0 traces" in r.stdout
     assert "serve smoke OK" in r.stdout
+
+
+# ---------------------------------------------------------------------------
+# frequency-ranked warm-weight cache (ISSUE-10 satellite)
+# ---------------------------------------------------------------------------
+
+def test_freq_cache_protects_hot_payloads():
+    """Eviction ranks by hit count (ties: least recently used), so a scan
+    of cold keys cannot flush the hot warm set the way pure LRU would."""
+    from repro.serve.engine import _FreqCache
+
+    c = _FreqCache(3)
+    c.put("hot", 0)
+    for _ in range(5):
+        assert c.get("hot") == 0
+    for i in range(10):
+        c.put(f"cold{i}", i)
+    assert "hot" in c                       # survived the scan
+    assert len(c) == 3
+    # cold keys evict in recency order among the zero-hit ties
+    assert set(c) == {"hot", "cold8", "cold9"}
+    # eviction bookkeeping follows the keys out
+    assert set(c.hits) == set(c)
+
+
+def test_warm_hits_metric_counts_payload_cache_hits(siren16):
+    """Serving a non-base weight set reads the payload cache; repeat stack
+    builds hit the warm entry and the warm_hits counter sees them."""
+    cfg, params, f, x = siren16
+    cg = P.compile_gradient(f, 1, x, config=DEFAULT_CONFIG.replace(block=8))
+    e = ServingEngine(multi_cache=1)
+    e.register("a", cg)
+    e.register("b", cg, weight_id="bw")
+    e.register("c", cg, weight_id="cw")
+    q = x[:8]
+    assert e.stats["warm_hits"] == 0
+    e.serve([("b", q)])                     # builds the (bw,) stack
+    h1 = e.stats["warm_hits"]
+    assert h1 >= 1
+    e.serve([("c", q)])                     # evicts it (multi_cache=1) ...
+    e.serve([("b", q)])                     # ... so the rebuild hits again
+    assert e.stats["warm_hits"] > h1
